@@ -1,0 +1,63 @@
+"""Demeter control-plane overhead benchmarks.
+
+The paper's loops run every 10 minutes; the controller must be cheap
+relative to that. Times GP fits, RGPE assembly, EHVI scoring over the full
+2592-config space, and one complete optimization_step on a warm store.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import (GP, DemeterController, DemeterHyperParams, build_rgpe,
+                        ehvi_2d, paper_flink_space)
+from repro.dsp import ClusterModel, DSPExecutor, JobConfig
+
+
+def bench_all() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = rng.uniform(0, 1, (40, 5))
+    y = np.sin(x @ rng.normal(0, 1, 5)) + rng.normal(0, 0.05, 40)
+    t0 = time.perf_counter()
+    gp = GP.fit(x, y, restarts=2, max_iter=60)
+    rows.append(("gp_fit_n40_d5", (time.perf_counter() - t0) * 1e6,
+                 "L-BFGS 2 restarts"))
+
+    space = paper_flink_space()
+    cand = space.matrix()
+    t0 = time.perf_counter()
+    mu, var = gp.posterior(cand)
+    rows.append(("gp_posterior_2592", (time.perf_counter() - t0) * 1e6,
+                 f"{len(cand)} configs"))
+
+    t0 = time.perf_counter()
+    ens = build_rgpe(gp, x, y, [gp, gp, gp])
+    rows.append(("rgpe_build_3base", (time.perf_counter() - t0) * 1e6,
+                 "256 rank samples"))
+
+    front = np.array([[0.5, 1.0], [0.7, 0.8], [0.9, 0.6]])
+    mu2 = np.stack([mu, mu], 1)
+    var2 = np.stack([var, var], 1)
+    t0 = time.perf_counter()
+    ehvi_2d(mu2, var2, front, (2.0, 2.0))
+    rows.append(("ehvi_exact_2592", (time.perf_counter() - t0) * 1e6,
+                 "full space"))
+
+    # one full optimization step on a warmed controller
+    execu = DSPExecutor(ClusterModel(), JobConfig(), seed=0)
+    ctl = DemeterController(space, execu,
+                            hp=DemeterHyperParams(profile_parallelism=2))
+    for _ in range(80):
+        execu.step(40_000.0)
+        ctl.ingest(execu.observe())
+    ctl.profiling_step()
+    ctl.profiling_step()
+    t0 = time.perf_counter()
+    ctl.optimization_step()
+    rows.append(("optimization_step_warm", (time.perf_counter() - t0) * 1e6,
+                 "incl. RGPE + space scan"))
+    return rows

@@ -1,0 +1,115 @@
+"""Paper-table benchmarks: the YSB/TSW experiments (Fig. 5/6, Table 3).
+
+Runs (trace x method) cells of the paper's evaluation on the DSP simulation
+and derives every reported artifact. Results are cached as .npz under
+``results/dsp_runs`` so the per-figure benches share runs.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.dsp import RunResult, run_experiment, tsw_like, ysb_like
+
+METHODS = ("static", "demeter", "reactive", "ds2")
+CACHE_DIR = "results/dsp_runs"
+
+
+def get_runs(duration_h: float = 3.0, dt_s: float = 10.0, seed: int = 0,
+             traces: tuple = ("ysb", "tsw")) -> Dict[str, Dict[str, RunResult]]:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    out: Dict[str, Dict[str, RunResult]] = {}
+    for tname in traces:
+        trace = (ysb_like if tname == "ysb" else tsw_like)(
+            duration_s=duration_h * 3600.0, dt_s=dt_s)
+        out[tname] = {}
+        for method in METHODS:
+            key = f"{tname}_{method}_{duration_h:g}h_dt{dt_s:g}_s{seed}"
+            path = os.path.join(CACHE_DIR, key + ".pkl")
+            if os.path.exists(path):
+                with open(path, "rb") as f:
+                    out[tname][method] = pickle.load(f)
+                continue
+            t0 = time.time()
+            res = run_experiment(trace, method, seed=seed)
+            with open(path, "wb") as f:
+                pickle.dump(res, f)
+            print(f"# ran {key} in {time.time()-t0:.0f}s", flush=True)
+            out[tname][method] = res
+    return out
+
+
+# -- Table 3: recovery times & reconfigurations ------------------------------
+def table3(runs: Dict[str, Dict[str, RunResult]]) -> List[str]:
+    lines = []
+    for tname, by_method in runs.items():
+        for method, res in by_method.items():
+            rec = []
+            for f in res.failures:
+                if f.recovery_s is None:
+                    rec.append("NR")
+                elif not np.isfinite(f.recovery_s):
+                    rec.append("6m+")
+                else:
+                    rec.append(f"{f.recovery_s:.0f}s")
+            lines.append(f"{tname},{method},delta={res.n_reconfigurations},"
+                         f"recoveries={'|'.join(rec)}")
+    return lines
+
+
+def recovery_deviation_vs_static(runs) -> Dict[str, Dict[str, float]]:
+    out = {}
+    for tname, by_method in runs.items():
+        stat = [r for r in by_method["static"].recovery_times()
+                if r is not None and np.isfinite(r)]
+        base = np.mean(stat) if stat else np.nan
+        out[tname] = {}
+        for method, res in by_method.items():
+            ok = [r for r in res.recovery_times()
+                  if r is not None and np.isfinite(r)]
+            out[tname][method] = (np.mean(ok) / base - 1.0) * 100.0 \
+                if ok and base else float("nan")
+    return out
+
+
+# -- Fig 6a/b: latency ECDF ---------------------------------------------------
+def latency_optimal_fraction(runs, band_s: float = 2.0
+                             ) -> Dict[str, Dict[str, float]]:
+    return {t: {m: res.frac_latency_below(band_s)
+                for m, res in by.items()} for t, by in runs.items()}
+
+
+# -- Fig 6c/d: cumulative resource usage ----------------------------------------
+def resource_usage_vs_static(runs) -> Dict[str, Dict[str, Dict[str, float]]]:
+    out = {}
+    for tname, by in runs.items():
+        cpu0 = by["static"].cumulative_cpu_s()
+        mem0 = by["static"].cumulative_mem_mb_s()
+        out[tname] = {}
+        for m, res in by.items():
+            out[tname][m] = {
+                "cpu_net": res.cumulative_cpu_s(True) / cpu0,
+                "cpu_gross": res.cumulative_cpu_s(False) / cpu0,
+                "mem_net": res.cumulative_mem_mb_s(True) / mem0,
+                "mem_gross": res.cumulative_mem_mb_s(False) / mem0,
+            }
+    return out
+
+
+# -- Fig 6e/f: usage trend over time -------------------------------------------
+def usage_trend(runs) -> Dict[str, Dict[str, float]]:
+    """Regression slope of Demeter's CPU usage over time (per hour,
+    normalized by the mean) — the paper's 'savings keep growing' claim."""
+    out = {}
+    for tname, by in runs.items():
+        res = by["demeter"]
+        t = res.times / 3600.0
+        u = res.usage_cpu
+        mask = np.isfinite(u)
+        slope = np.polyfit(t[mask], u[mask], 1)[0]
+        out[tname] = {"cpu_slope_per_h": float(slope / max(u.mean(), 1e-9))}
+    return out

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks (CPU wall-clock; TPU is the target).
+
+Times the pure-jnp reference paths (the compiled dry-run path) and, for
+interest, the interpret-mode Pallas kernels. Interpret mode is a Python
+interpreter of the kernel body — its absolute numbers mean nothing for TPU;
+the reference timings give the CPU-comparable baseline and regression guard.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def bench_all() -> List[Tuple[str, float, str]]:
+    rows = []
+    # flash attention reference (jit) at a serving-ish shape
+    q = jnp.asarray(RNG.normal(size=(1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 512, 2, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    rows.append(("attention_ref_512", _time(f, q, k, v),
+                 "B1xS512xH8/2xD64 fp32"))
+
+    # decode attention reference
+    qd = jnp.asarray(RNG.normal(size=(8, 1, 8, 64)), jnp.float32)
+    kd = jnp.asarray(RNG.normal(size=(8, 2048, 2, 64)), jnp.float32)
+    vd = jnp.asarray(RNG.normal(size=(8, 2048, 2, 64)), jnp.float32)
+    lens = jnp.full((8,), 1500, jnp.int32)
+    fd = jax.jit(lambda q, k, v, l: ref.decode_attention_ref(q, k, v, l))
+    rows.append(("decode_ref_2k", _time(fd, qd, kd, vd, lens),
+                 "B8 cache2048 H8/2"))
+
+    # SSD scan reference
+    x = jnp.asarray(RNG.normal(size=(2, 1024, 8, 64)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (2, 1024, 8)), jnp.float32)
+    al = jnp.asarray(RNG.uniform(0, 1, (8,)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(2, 1024, 1, 128)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(2, 1024, 1, 128)), jnp.float32)
+    fs = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=256))
+    rows.append(("ssd_ref_1k", _time(fs, x, dt, al, bm, cm),
+                 "B2xS1024xH8xP64xN128"))
+
+    # grouped matmul reference vs dense-equivalent FLOPs
+    from repro.kernels.grouped_matmul import sort_tokens_for_experts
+    xx = RNG.normal(size=(2048, 256)).astype(np.float32)
+    eids = RNG.integers(0, 8, 2048)
+    lhs, tiles, _, _ = sort_tokens_for_experts(xx, eids, 8, 128)
+    rhs = jnp.asarray(RNG.normal(size=(8, 256, 512)), jnp.float32)
+    fg = jax.jit(lambda l, r: ref.grouped_matmul_ref(np.asarray(l),
+                                                     r, tiles, 128))
+    t0 = time.perf_counter()
+    out = ref.grouped_matmul_ref(lhs, rhs, tiles, 128)
+    gm_us = (time.perf_counter() - t0) * 1e6
+    rows.append(("grouped_matmul_ref_2k", gm_us, "2048 tok E8 256->512"))
+
+    # fused rmsnorm
+    xr = jnp.asarray(RNG.normal(size=(4, 1024, 1024)), jnp.float32)
+    rr = jnp.asarray(RNG.normal(size=(4, 1024, 1024)), jnp.float32)
+    sc = jnp.asarray(RNG.normal(size=(1024,)) * 0.1, jnp.float32)
+    fr = jax.jit(lambda x, r, s: ref.fused_rmsnorm_ref(x, r, s))
+    rows.append(("rmsnorm_ref_4M", _time(fr, xr, rr, sc), "4x1024x1024"))
+    return rows

@@ -1,0 +1,135 @@
+"""§Roofline: derive the three-term roofline per (arch x shape) cell.
+
+Sources: the unrolled single-pod dry-run (results/roofline_raw.json) for
+exact per-device HLO FLOPs / bytes / collective bytes. Hardware: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (assignment constants).
+
+cost_analysis of the SPMD-partitioned module reports per-device numbers
+(validated against 6·N·D in tests), so terms are directly:
+
+    compute_s    = flops / 197e12
+    memory_s     = bytes_accessed / 819e9
+    collective_s = collective_bytes / 50e9
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES, SHAPE_KIND
+from repro.models import param_count
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token activated parameters (MoE: top-k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    e = cfg.moe
+    gates = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+    per_expert = gates * cfg.d_model * e.d_expert
+    n_moe_layers = cfg.n_layers - e.first_dense_layers
+    inactive = (e.n_routed - e.top_k) * per_expert * n_moe_layers
+    return total - inactive
+
+
+def model_flops_per_device(cfg: ModelConfig, shape: str,
+                           chips: int = CHIPS) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for inference."""
+    seq, batch = SHAPES[shape]
+    kind = SHAPE_KIND[shape]
+    n = active_param_count(cfg)
+    if kind == "train":
+        tokens, factor = batch * seq, 6.0
+    elif kind == "prefill":
+        tokens, factor = batch * seq, 2.0
+    else:  # decode: one token per sequence
+        tokens, factor = batch * 1, 2.0
+    return factor * n * tokens / chips
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak sustained if the step runs at the dominant
+        bound: MODEL_FLOPS / (step_s · PEAK)."""
+        return self.model_flops / (self.step_s * PEAK_FLOPS) \
+            if self.step_s else 0.0
+
+
+def load_cells(path: str = "results/roofline_raw.json",
+               mesh: str = "single") -> Dict[str, RooflineCell]:
+    with open(path) as f:
+        raw = json.load(f)
+    cells = {}
+    for key, rec in raw.items():
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        cfg = get_config(rec["arch"])
+        cell = RooflineCell(
+            arch=rec["arch"], shape=rec["shape"],
+            compute_s=rec["flops"] / PEAK_FLOPS,
+            memory_s=rec["bytes_accessed"] / HBM_BW,
+            collective_s=rec["collective_total"] / ICI_BW,
+            model_flops=model_flops_per_device(cfg, rec["shape"]),
+            hlo_flops=rec["flops"],
+        )
+        cells[f"{rec['arch']}/{rec['shape']}"] = cell
+    return cells
+
+
+def table(cells: Dict[str, RooflineCell]) -> str:
+    hdr = (f"{'cell':42s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bound':>10s} {'MF/HF':>6s} {'roofl%':>7s}")
+    rows = [hdr]
+    for key in sorted(cells):
+        c = cells[key]
+        rows.append(f"{key:42s} {c.compute_s:10.4f} {c.memory_s:10.4f} "
+                    f"{c.collective_s:10.4f} {c.dominant:>10s} "
+                    f"{c.useful_ratio:6.2f} {100*c.roofline_fraction:6.1f}%")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    if not os.path.exists("results/roofline_raw.json"):
+        print("roofline_raw.json missing — run "
+              "`python -m repro.launch.dryrun --mesh single --unroll "
+              "--out results/roofline_raw.json` first")
+        return
+    print(table(load_cells()))
+
+
+if __name__ == "__main__":
+    main()

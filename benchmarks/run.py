@@ -1,0 +1,77 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure plus framework benches. Prints
+``name,us_per_call,derived`` CSV. Default durations are laptop-friendly;
+``--full`` runs the paper's 18-hour experiments (background-job territory).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 18 h paper experiments")
+    ap.add_argument("--hours", type=float, default=None,
+                    help="override experiment duration")
+    ap.add_argument("--skip-dsp", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    # -- framework micro-benches ------------------------------------------
+    from . import controller_bench, kernels_bench
+    for name, us, derived in kernels_bench.bench_all():
+        emit(f"kernel/{name}", us, derived)
+    for name, us, derived in controller_bench.bench_all():
+        emit(f"controller/{name}", us, derived)
+
+    # -- paper tables/figures (DSP experiments) -----------------------------
+    if not args.skip_dsp:
+        from . import dsp_experiments as dsp
+        hours = args.hours or (18.0 if args.full else 3.0)
+        runs = dsp.get_runs(duration_h=hours)
+        wall = {t: {m: float(len(r.times) * (r.times[1] - r.times[0]))
+                    for m, r in by.items()} for t, by in runs.items()}
+        for line in dsp.table3(runs):                       # Table 3
+            emit("table3/recovery", 0.0, line)
+        for t, by in dsp.latency_optimal_fraction(runs).items():  # Fig 6a/b
+            for m, frac in by.items():
+                emit(f"fig6ab/latency_optimal/{t}/{m}", 0.0,
+                     f"frac_optimal={frac:.3f}")
+        for t, by in dsp.resource_usage_vs_static(runs).items():  # Fig 6c/d
+            for m, d in by.items():
+                emit(f"fig6cd/resources/{t}/{m}", 0.0,
+                     f"cpu_net={d['cpu_net']:.3f};"
+                     f"cpu_gross={d['cpu_gross']:.3f};"
+                     f"mem_net={d['mem_net']:.3f};"
+                     f"mem_gross={d['mem_gross']:.3f}")
+        for t, d in dsp.usage_trend(runs).items():          # Fig 6e/f
+            emit(f"fig6ef/trend/{t}/demeter", 0.0,
+                 f"cpu_slope_per_h={d['cpu_slope_per_h']:+.4f}")
+        for t, by in dsp.recovery_deviation_vs_static(runs).items():
+            for m, dev in by.items():
+                emit(f"table3/deviation/{t}/{m}", 0.0,
+                     f"recovery_dev_vs_static={dev:+.1f}%")
+
+    # -- roofline (if the dry-run artifacts exist) ---------------------------
+    try:
+        from . import roofline
+        cells = roofline.load_cells()
+        for key, c in sorted(cells.items()):
+            emit(f"roofline/{key}", c.step_s * 1e6,
+                 f"bound={c.dominant};useful={c.useful_ratio:.2f};"
+                 f"roofline_frac={c.roofline_fraction:.3f}")
+    except FileNotFoundError:
+        print("# roofline_raw.json missing; run the unrolled dry-run first",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

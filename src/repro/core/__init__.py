@@ -1,0 +1,33 @@
+"""Demeter core: the paper's contribution as a composable library.
+
+Layers (paper §2): TSF workload forecasting (:mod:`forecast`), workload
+segmentation (:mod:`segments`), GP + RGPE modeling (:mod:`gp`, :mod:`rgpe`),
+feasibility-weighted EHVI acquisition (:mod:`acquisition`), runtime latency
+constraints (:mod:`latency`), anomaly-based recovery measurement
+(:mod:`anomaly`) and the profiling/optimization controller (:mod:`demeter`).
+"""
+from .acquisition import (ehvi_2d, expected_improvement, hypervolume_2d,
+                          pareto_front_2d, prob_feasible,
+                          select_profiling_batch)
+from .anomaly import MetricDetector, RecoveryTracker
+from .config_space import (ConfigSpace, Parameter, paper_flink_space,
+                           tpu_serving_space, tpu_training_space)
+from .demeter import (DemeterController, DemeterHyperParams, Executor,
+                      ModelBank)
+from .forecast import OnlineARIMA, binned_forecast
+from .gp import GP
+from .latency import LatencyConstraint
+from .rgpe import RGPEnsemble, build_rgpe
+from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Observation,
+                       Segment, SegmentStore)
+
+__all__ = [
+    "ConfigSpace", "Parameter", "paper_flink_space", "tpu_serving_space",
+    "tpu_training_space", "GP", "OnlineARIMA", "binned_forecast",
+    "RGPEnsemble", "build_rgpe", "ehvi_2d", "expected_improvement",
+    "hypervolume_2d", "pareto_front_2d", "prob_feasible",
+    "select_profiling_batch", "LatencyConstraint", "MetricDetector",
+    "RecoveryTracker", "DemeterController", "DemeterHyperParams", "Executor",
+    "ModelBank", "SegmentStore", "Segment", "Observation", "USAGE", "LATENCY",
+    "RECOVERY", "METRICS",
+]

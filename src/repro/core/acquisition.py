@@ -1,0 +1,153 @@
+"""Acquisition functions for MOBO (paper §2.2/§2.3).
+
+Profiling candidates are scored by *expected hypervolume improvement weighted
+by the probability of feasibility* over all modeled constraints. The
+bi-objective case (resource usage, latency) admits an **exact** EHVI under
+independent Gaussian marginals via a strip decomposition of the dominated
+region: for a staircase front the improvement factors per strip into a width
+ramp in objective 1 and a height ramp in objective 2, and
+
+    E[max(c - z, 0)] = (c - mu) Phi((c - mu)/sigma) + sigma phi((c - mu)/sigma)
+
+closes both integrals. Batch (q-point) selection uses sequential greedy with
+Kriging-believer hallucination.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy import stats
+
+
+def _ramp_expectation(c: np.ndarray, mu: np.ndarray, sigma: np.ndarray
+                      ) -> np.ndarray:
+    """E[max(c - Z, 0)], Z ~ N(mu, sigma^2); broadcasts, handles c = -inf."""
+    sigma = np.maximum(sigma, 1e-12)
+    neg_inf = np.isneginf(c)
+    c_safe = np.where(neg_inf, 0.0, c)
+    z = (c_safe - mu) / sigma
+    out = (c_safe - mu) * stats.norm.cdf(z) + sigma * stats.norm.pdf(z)
+    return np.where(neg_inf, 0.0, out)
+
+
+def pareto_front_2d(points: np.ndarray) -> np.ndarray:
+    """Non-dominated subset for 2-objective minimization, sorted by obj 1."""
+    if len(points) == 0:
+        return points.reshape(0, 2)
+    order = np.lexsort((points[:, 1], points[:, 0]))
+    front: List[np.ndarray] = []
+    best_y = np.inf
+    for p in points[order]:
+        if p[1] < best_y - 1e-15:
+            front.append(p)
+            best_y = p[1]
+    return np.asarray(front)
+
+
+def hypervolume_2d(front: np.ndarray, ref: Tuple[float, float]) -> float:
+    """Dominated hypervolume (minimization) of a staircase front w.r.t ref."""
+    front = pareto_front_2d(np.asarray(front, np.float64))
+    front = front[(front[:, 0] < ref[0]) & (front[:, 1] < ref[1])]
+    if len(front) == 0:
+        return 0.0
+    hv, prev_y = 0.0, ref[1]
+    for x, y in front:
+        hv += (ref[0] - x) * (prev_y - y)
+        prev_y = y
+    return float(hv)
+
+
+def ehvi_2d(mu: np.ndarray, var: np.ndarray, front: np.ndarray,
+            ref: Tuple[float, float]) -> np.ndarray:
+    """Exact EHVI for a batch of candidates.
+
+    mu, var: (n, 2) posterior marginals; front: (k, 2) observed points
+    (will be reduced to its Pareto subset); ref: reference point. Returns (n,).
+    """
+    mu = np.atleast_2d(mu)
+    var = np.atleast_2d(var)
+    sd = np.sqrt(np.maximum(var, 1e-18))
+    front = pareto_front_2d(np.asarray(front, np.float64))
+    front = front[(front[:, 0] < ref[0]) & (front[:, 1] < ref[1])]
+
+    # Strip edges along objective 1 and staircase heights along objective 2.
+    # Strip j spans [e_j, e_{j+1}] with un-dominated headroom below h_j.
+    if len(front) == 0:
+        edges = np.array([-np.inf, ref[0]])
+        heights = np.array([ref[1]])
+    else:
+        edges = np.concatenate([[-np.inf], front[:, 0], [ref[0]]])
+        heights = np.concatenate([[ref[1]], front[:, 1]])
+
+    g1_right = _ramp_expectation(np.minimum(edges[1:], ref[0])[None, :],
+                                 mu[:, :1], sd[:, :1])
+    g1_left = _ramp_expectation(edges[:-1][None, :], mu[:, :1], sd[:, :1])
+    widths = np.maximum(g1_right - g1_left, 0.0)           # (n, strips)
+    heights_e = _ramp_expectation(heights[None, :], mu[:, 1:], sd[:, 1:])
+    return np.sum(widths * heights_e, axis=1)
+
+
+def expected_improvement(mu: np.ndarray, var: np.ndarray, best: float
+                         ) -> np.ndarray:
+    """Single-objective EI for minimization."""
+    return _ramp_expectation(np.asarray(best), np.asarray(mu),
+                             np.sqrt(np.maximum(var, 1e-18)))
+
+
+def prob_feasible(mu: np.ndarray, var: np.ndarray, threshold: float
+                  ) -> np.ndarray:
+    """P(metric <= threshold) under the Gaussian posterior."""
+    sd = np.sqrt(np.maximum(var, 1e-18))
+    return stats.norm.cdf((threshold - np.asarray(mu)) / sd)
+
+
+def select_profiling_batch(
+        candidates: np.ndarray,
+        post_objectives,            # callable (X) -> ((n,2) mu, (n,2) var)
+        post_recovery,              # callable (X) -> ((n,) mu, (n,) var) | None
+        observed_front: np.ndarray,
+        ref: Tuple[float, float],
+        q: int,
+        *,
+        recovery_constraint: Optional[float] = None,
+        exclude: Sequence[int] = (),
+        bias: Optional[np.ndarray] = None,
+) -> List[int]:
+    """Greedy q-batch maximizing feasibility-weighted EHVI (paper §2.3).
+
+    ``bias`` multiplies the acquisition — the domain-knowledge preference of
+    §2.3 (prefer larger configs after a revert, smaller after a downscale).
+    Returns indices into ``candidates``.
+    """
+    mu, var = post_objectives(candidates)
+    score = ehvi_2d(mu, var, observed_front, ref)
+    if post_recovery is not None and recovery_constraint is not None:
+        rmu, rvar = post_recovery(candidates)
+        score = score * prob_feasible(rmu, rvar, recovery_constraint)
+    if bias is not None:
+        score = score * bias
+    score = np.asarray(score, np.float64).copy()
+    score[list(exclude)] = -np.inf
+
+    picked: List[int] = []
+    front = np.asarray(observed_front, np.float64).reshape(-1, 2).copy()
+    for _ in range(q):
+        j = int(np.argmax(score))
+        if not np.isfinite(score[j]) or score[j] <= 0:
+            break
+        picked.append(j)
+        score[j] = -np.inf
+        # Kriging believer: hallucinate the candidate at its posterior mean
+        # and re-score the remainder against the augmented front.
+        front = np.vstack([front, mu[j]]) if len(front) else mu[j:j + 1]
+        live = np.isfinite(score)
+        if np.any(live):
+            upd = ehvi_2d(mu[live], var[live], front, ref)
+            if post_recovery is not None and recovery_constraint is not None:
+                rmu, rvar = post_recovery(candidates[live])
+                upd = upd * prob_feasible(rmu, rvar, recovery_constraint)
+            if bias is not None:
+                upd = upd * bias[live]
+            score[live] = upd
+    return picked

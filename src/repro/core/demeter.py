@@ -1,0 +1,388 @@
+"""The Demeter controller: profiling + optimization processes (paper §2).
+
+Demeter runs two iterative processes against an :class:`Executor` (the target
+system — our DSP cluster simulation for the paper-faithful reproduction, or
+the TPU serving/training engines for the framework integration):
+
+* **Profiling** (§2.3): forecast the workload, and if the segment's MOBO
+  models cannot yet confidently pick a near-optimal configuration, launch q
+  parallel short-lived profiling runs chosen by feasibility-weighted EHVI
+  (annealed per segment), measure latency + injected-failure recovery, and
+  fold the observations back into the models.
+* **Optimizing** (§2.4, Fig. 4): derive the latency constraint LC from
+  observed latencies; revert to C_max when the target job is unstable or the
+  models know nothing about the predicted rate; otherwise pick the cheapest
+  predicted-feasible configuration, guarded by the safety buffer SB and the
+  efficiency threshold ET.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Protocol, Tuple
+
+import numpy as np
+
+from .acquisition import ehvi_2d, pareto_front_2d, select_profiling_batch
+from .config_space import ConfigSpace
+from .forecast import OnlineARIMA, binned_forecast
+from .gp import GP
+from .latency import LatencyConstraint
+from .rgpe import RGPEnsemble, build_rgpe
+from .segments import LATENCY, RECOVERY, USAGE, Segment, SegmentStore
+
+
+class Executor(Protocol):
+    """What Demeter needs from the system it controls."""
+
+    def cmax_config(self) -> Dict[str, float]: ...
+
+    def current_config(self) -> Dict[str, float]: ...
+
+    def reconfigure(self, config: Mapping[str, float]) -> None: ...
+
+    def observe(self) -> Dict[str, float]:
+        """Latest target-job metrics: {'rate', 'latency', 'usage', ...}."""
+        ...
+
+    def profile(self, configs: List[Dict[str, float]], rate: float
+                ) -> List[Optional[Dict[str, float]]]:
+        """Run parallel short-lived profiling jobs at ``rate``; each result
+        carries USAGE / LATENCY / RECOVERY (None for a failed run)."""
+        ...
+
+    def allocated_cost(self, config: Mapping[str, float]) -> float:
+        """Deterministic allocated-resource scalar (for ordering/bias)."""
+        ...
+
+
+@dataclass
+class DemeterHyperParams:
+    """Paper §3.2 defaults."""
+
+    segment_size: float = 10_000.0        # SS
+    safety_buffer: float = 0.30           # SB
+    efficiency_threshold: float = 0.05    # ET
+    recovery_constraint_s: float = 180.0  # RC
+    forecast_horizon: int = 10            # TSF steps ahead
+    forecast_bins: int = 5
+    profile_parallelism: int = 2          # max concurrent profiling runs
+    profile_anneal: float = 0.5           # q ~ ceil(q0 * anneal^rounds)
+    profile_interval_s: float = 1500.0    # profiling process loop delay
+    profile_budget_frac: float = 0.15     # max profiling usage vs target job
+    max_profile_rounds: int = 8           # hard cap per segment (annealing
+                                          # floor is 1, so a cap is needed)
+    min_obs_to_optimize: int = 3          # obs needed before trusting a segment
+    ehvi_stop_rel: float = 0.01           # stop profiling when EHVI is this
+                                          # small relative to the front's HV
+
+
+@dataclass
+class ModelBank:
+    """Per-(segment, metric) GPs + RGPE ensembles with dirty-tracking."""
+
+    store: SegmentStore
+    min_fit: int = 3
+    max_base_models: int = 4
+    refit_growth: float = 0.10           # refit when data grew >= 10 %
+    _gps: Dict[Tuple[int, str], Tuple[int, Optional[GP]]] = field(
+        default_factory=dict)
+
+    def gp(self, segment: Segment, metric: str) -> Optional[GP]:
+        key = (segment.index, metric)
+        x, y = segment.data(metric)
+        cached = self._gps.get(key)
+        if cached is not None:
+            n_fit = cached[0]
+            fresh_enough = (len(y) == n_fit
+                            or (cached[1] is not None
+                                and len(y) < n_fit * (1 + self.refit_growth)))
+            if fresh_enough:
+                return cached[1]
+        gp = None
+        if len(y) >= self.min_fit and np.ptp(y) > 0:
+            gp = GP.fit(x, y, restarts=2, max_iter=60,
+                        seed=segment.index * 131 + hash(metric) % 997)
+        self._gps[key] = (len(y), gp)
+        return gp
+
+    def ensemble(self, segment: Segment, metric: str) -> Optional[RGPEnsemble]:
+        target_gp = self.gp(segment, metric)
+        tx, ty = segment.data(metric)
+        others = self.store.others(segment)
+        # Nearest segments first — behaviour transfers locally in rate.
+        others.sort(key=lambda s: abs(s.index - segment.index))
+        base = []
+        for seg in others:
+            g = self.gp(seg, metric)
+            if g is not None:
+                base.append(g)
+            if len(base) >= self.max_base_models:
+                break
+        return build_rgpe(target_gp, tx, ty, base,
+                          seed=segment.index * 7919 + hash(metric) % 997)
+
+
+@dataclass
+class DemeterController:
+    """Binds the two processes to an executor + a configuration space."""
+
+    space: ConfigSpace
+    executor: Executor
+    hp: DemeterHyperParams = field(default_factory=DemeterHyperParams)
+    tsf: OnlineARIMA = field(default_factory=lambda: OnlineARIMA(p=8, d=1))
+    lc: LatencyConstraint = field(default_factory=LatencyConstraint)
+    store: SegmentStore = field(init=False)
+    bank: ModelBank = field(init=False)
+    #: event log for experiments: (kind, payload) tuples
+    events: List[Tuple[str, Dict]] = field(default_factory=list)
+    n_reconfigurations: int = 0
+    profile_cost: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.store = SegmentStore(self.hp.segment_size)
+        self.bank = ModelBank(self.store)
+        self._candidates = self.space.matrix()
+        self._configs = self.space.enumerate()
+        self._alloc = np.asarray(
+            [self.executor.allocated_cost(c) for c in self._configs])
+
+    # ------------------------------------------------------------------
+    # shared plumbing
+    # ------------------------------------------------------------------
+    def ingest(self, metrics: Mapping[str, float]) -> None:
+        """Feed target-job telemetry (call every metrics interval)."""
+        if "rate" in metrics:
+            self.tsf.update(metrics["rate"])
+        if "latency" in metrics:
+            self.lc.observe(metrics["latency"])
+
+    def predicted_rate(self) -> float:
+        return binned_forecast(self.tsf, self.hp.forecast_horizon,
+                               self.hp.forecast_bins)
+
+    def _posteriors(self, segment: Segment, metric: str):
+        ens = self.bank.ensemble(segment, metric)
+        if ens is None:
+            return None
+        return lambda xq: ens.posterior(xq)
+
+    def _objective_posterior(self, segment: Segment):
+        pu = self._posteriors(segment, USAGE)
+        pl = self._posteriors(segment, LATENCY)
+        if pu is None or pl is None:
+            return None
+
+        def post(xq):
+            mu_u, var_u = pu(xq)
+            mu_l, var_l = pl(xq)
+            return np.stack([mu_u, mu_l], 1), np.stack([var_u, var_l], 1)
+
+        return post
+
+    def _front_and_ref(self, segment: Segment):
+        pts = np.asarray([[o.metrics[USAGE], o.metrics[LATENCY]]
+                          for o in segment.observations
+                          if USAGE in o.metrics and LATENCY in o.metrics and
+                          np.isfinite(o.metrics[USAGE]) and
+                          np.isfinite(o.metrics[LATENCY])])
+        if len(pts) == 0:
+            return np.zeros((0, 2)), (1.0, 1.0)
+        ref = (float(pts[:, 0].max()) * 1.2 + 1e-9,
+               float(pts[:, 1].max()) * 1.2 + 1e-9)
+        return pts, ref
+
+    # ------------------------------------------------------------------
+    # process 1: profiling (paper §2.3)
+    # ------------------------------------------------------------------
+    def profiling_step(self) -> List[Dict[str, float]]:
+        rate = self.predicted_rate()
+        if rate <= 0:
+            return []
+        segment = self.store.segment_for(rate)
+
+        q = self._annealed_q(segment)
+        if q < 1:
+            return []
+
+        picked_cfgs = self._select_profiles(segment, rate, q)
+        if not picked_cfgs:
+            return []
+
+        results = self.executor.profile(picked_cfgs, rate)
+        ran: List[Dict[str, float]] = []
+        for cfg, res in zip(picked_cfgs, results):
+            if res is None:
+                continue
+            x = self.space.encode(cfg)
+            self.store.record(cfg, x, rate, res)
+            self.profile_cost += self.executor.allocated_cost(cfg)
+            ran.append(cfg)
+        segment.profile_rounds += 1
+        self.events.append(("profile", {"rate": rate, "configs": ran}))
+        return ran
+
+    def _annealed_q(self, segment: Segment) -> int:
+        if segment.profile_rounds >= self.hp.max_profile_rounds:
+            return 0
+        q0 = self.hp.profile_parallelism
+        q = int(np.ceil(q0 * self.hp.profile_anneal ** segment.profile_rounds))
+        return min(q, q0)
+
+    def _select_profiles(self, segment: Segment, rate: float, q: int
+                         ) -> List[Dict[str, float]]:
+        n = len(self._configs)
+        tried = {self.space.index(o.config) for o in segment.observations}
+
+        post = self._objective_posterior(segment)
+        if post is None:
+            # Cold start: seed along the allocation axis (cheap, median,
+            # C_max-adjacent) so the first GPs see contrast; rotate the
+            # spread each round so repeated cold-start rounds add new data.
+            untried = [i for i in range(n) if i not in tried]
+            if not untried:
+                return []
+            order = sorted(untried, key=lambda i: self._alloc[i])
+            offset = (segment.profile_rounds * 0.37) % 1.0
+            fracs = [(f + offset) % 1.0 for f in np.linspace(0.15, 0.95, q)]
+            seeds = dict.fromkeys(order[int(f * (len(order) - 1))]
+                                  for f in fracs)
+            return [self._configs[i] for i in seeds]
+
+        front, ref = self._front_and_ref(segment)
+        # Knowledge saturation check: residual EHVI small vs front HV.
+        pr = self._posteriors(segment, RECOVERY)
+        bias = self._domain_bias(segment, rate)
+        idx = select_profiling_batch(
+            self._candidates, post, pr, front, ref, q,
+            recovery_constraint=self.hp.recovery_constraint_s,
+            exclude=list(tried), bias=bias)
+        if not idx:
+            return []
+        mu, var = post(self._candidates[idx])
+        from .acquisition import hypervolume_2d
+        hv = max(hypervolume_2d(front, ref), 1e-12)
+        best = float(ehvi_2d(mu[:1], var[:1], front, ref)[0])
+        if best / hv < self.hp.ehvi_stop_rel:
+            return []  # models are confident enough — skip profiling
+        return [self._configs[i] for i in idx]
+
+    def _domain_bias(self, segment: Segment, rate: float
+                     ) -> Optional[np.ndarray]:
+        """Paper §2.3 domain knowledge: after a revert at a similar rate,
+        prefer configurations with *more* resources than the failed one;
+        after a downscale, prefer *fewer*."""
+        reverted = [o for o in segment.observations if o.reverted]
+        downs = [o for o in segment.observations if o.downscaled]
+        if not reverted and not downs:
+            return None
+        bias = np.ones(len(self._configs))
+        for o in reverted:
+            cut = self.executor.allocated_cost(o.config)
+            bias *= np.where(self._alloc > cut, 1.0, 0.2)
+        if not reverted:
+            for o in downs:
+                cut = self.executor.allocated_cost(o.config)
+                bias *= np.where(self._alloc <= cut, 1.0, 0.5)
+        return bias
+
+    # ------------------------------------------------------------------
+    # process 2: optimizing (paper §2.4, Fig. 4)
+    # ------------------------------------------------------------------
+    def optimization_step(self) -> Optional[Dict[str, float]]:
+        metrics = self.executor.observe()
+        current = self.executor.current_config()
+        cmax = self.executor.cmax_config()
+        lavg = metrics.get("latency", float("nan"))
+
+        # Unstable target job -> C_max, and remember the config was unfit.
+        if np.isfinite(lavg) and not self.lc.is_normal(lavg):
+            self._mark(current, metrics, reverted=True)
+            if current != cmax:
+                self._apply(cmax, reason="latency-violation")
+                return cmax
+            return None
+
+        rate = self.predicted_rate()
+        segment = self.store.segment_for(rate)
+        if len(segment) < self.hp.min_obs_to_optimize:
+            if current != cmax:
+                self._apply(cmax, reason="unknown-workload")
+                return cmax
+            return None
+
+        choice = self._pick_config(segment)
+        if choice is None:
+            if current != cmax:
+                self._apply(cmax, reason="no-feasible-config")
+                return cmax
+            return None
+
+        cfg, predicted_usage = choice
+        # Baseline side of the ET check: the *observed* usage of the running
+        # configuration (we are measuring it continuously); fall back to the
+        # model prediction when telemetry is missing.
+        cur_usage = metrics.get("usage", float("nan"))
+        if not np.isfinite(cur_usage):
+            cur_usage = self._predicted_usage(segment, current)
+        if cfg == current or cur_usage is None:
+            return None
+        saving = (cur_usage - predicted_usage) / max(cur_usage, 1e-12)
+        if saving >= self.hp.efficiency_threshold:
+            self._mark(current, metrics, downscaled=True)
+            self._apply(cfg, reason=f"efficiency+{saving:.2%}")
+            return cfg
+        return None
+
+    def _pick_config(self, segment: Segment
+                     ) -> Optional[Tuple[Dict[str, float], float]]:
+        post = self._objective_posterior(segment)
+        pr = self._posteriors(segment, RECOVERY)
+        lc = self.lc.constraint()
+        if post is None or lc is None:
+            return None
+        mu, _var = post(self._candidates)
+        feasible = mu[:, 1] < lc
+        if pr is not None:
+            rmu, _rvar = pr(self._candidates)
+            feasible &= rmu <= self.hp.recovery_constraint_s
+        idx = np.flatnonzero(feasible)
+        if len(idx) == 0:
+            return None
+        # Sort by predicted usage; apply the safety buffer percentile skip.
+        order = idx[np.argsort(mu[idx, 0])]
+        k = min(int(np.floor(self.hp.safety_buffer * len(order))),
+                len(order) - 1)
+        j = int(order[k])
+        return self._configs[j], float(mu[j, 0])
+
+    def _predicted_usage(self, segment: Segment,
+                         config: Mapping[str, float]) -> Optional[float]:
+        post = self._posteriors(segment, USAGE)
+        if post is None:
+            return None
+        mu, _ = post(self.space.encode(config)[None, :])
+        return float(mu[0])
+
+    # ------------------------------------------------------------------
+    def _apply(self, cfg: Dict[str, float], *, reason: str) -> None:
+        self.executor.reconfigure(cfg)
+        self.n_reconfigurations += 1
+        self.events.append(("reconfigure", {"config": dict(cfg),
+                                            "reason": reason}))
+
+    def _mark(self, config: Mapping[str, float], metrics: Mapping[str, float],
+              **flags) -> None:
+        """Record a target-job outcome observation with domain-knowledge flags."""
+        rate = metrics.get("rate")
+        if rate is None or not np.isfinite(rate):
+            return
+        obs_metrics = {}
+        if np.isfinite(metrics.get("usage", float("nan"))):
+            obs_metrics[USAGE] = float(metrics["usage"])
+        if np.isfinite(metrics.get("latency", float("nan"))):
+            obs_metrics[LATENCY] = float(metrics["latency"])
+        try:
+            x = self.space.encode(config)
+        except ValueError:
+            return
+        self.store.record(config, x, float(rate), obs_metrics, **flags)

@@ -1,0 +1,123 @@
+"""Rank-weighted Gaussian Process Ensembles (paper §2.2, eq. 1).
+
+RGPE (Feurer et al.) transfers knowledge across workload segments: base GPs
+trained on *other* segments are combined with the target segment's GP,
+
+    m_tar(x) ~ N( Σ_i a_i μ_i(x) ,  Σ_i a_i² σ_i²(x) ),
+
+where the weights ``a_i`` come from a pairwise ranking loss evaluated on the
+target segment's observations — base models that rank the target's
+configurations well get weight; the target model itself is scored with
+leave-one-out posterior samples to avoid optimistic bias. Weight dilution is
+prevented by discarding base models whose sampled loss exceeds the target
+model's 95th-percentile loss (Feurer et al., §4.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .gp import GP
+
+
+def _ranking_loss(pred: np.ndarray, target: np.ndarray) -> np.ndarray:
+    """Number of misranked pairs per sample. pred: (S, n), target: (n,)."""
+    # For all i < j: misranked if (pred_i < pred_j) != (target_i < target_j).
+    n = len(target)
+    iu, ju = np.triu_indices(n, k=1)
+    pd = pred[:, iu] < pred[:, ju]
+    td = (target[iu] < target[ju])[None, :]
+    return np.sum(pd != td, axis=1).astype(np.float64)
+
+
+@dataclass
+class RGPEnsemble:
+    """Weighted GP mixture with the paper's mean/variance combination rule."""
+
+    gps: List[GP]
+    weights: np.ndarray
+
+    def posterior(self, xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        xq = np.atleast_2d(np.asarray(xq, np.float64))
+        mean = np.zeros(len(xq))
+        var = np.zeros(len(xq))
+        for gp, a in zip(self.gps, self.weights):
+            if a <= 0.0:
+                continue
+            m, v = gp.posterior(xq)
+            mean += a * m
+            var += (a * a) * v
+        return mean, np.maximum(var, 1e-12)
+
+    @property
+    def n_members(self) -> int:
+        return int(np.sum(self.weights > 0))
+
+
+def build_rgpe(target_gp: Optional[GP],
+               target_x: np.ndarray,
+               target_y: np.ndarray,
+               base_gps: Sequence[GP],
+               *,
+               n_samples: int = 256,
+               dilution_percentile: float = 95.0,
+               seed: int = 0) -> Optional[RGPEnsemble]:
+    """Assemble the RGPE for one (segment, metric).
+
+    Falls back gracefully at the cold-start corner cases:
+      * no models at all            -> None (caller reverts to C_max);
+      * only a target model         -> ensemble == target GP;
+      * no/insufficient target data -> uniform weights over base models.
+    """
+    base_gps = list(base_gps)
+    if target_gp is None and not base_gps:
+        return None
+    if target_gp is not None and not base_gps:
+        return RGPEnsemble([target_gp], np.array([1.0]))
+
+    n_target = len(target_y)
+    if target_gp is None or n_target < 3:
+        # Not enough target evidence for ranking: borrow uniformly.
+        gps = list(base_gps) + ([target_gp] if target_gp is not None else [])
+        w = np.full(len(gps), 1.0 / len(gps))
+        return RGPEnsemble(gps, w)
+
+    # Score on the target GP's own training set (it may lag the segment's
+    # live data by a few points when refits are batched).
+    target_x = target_gp.x
+    target_y = np.asarray(target_gp.train_targets, np.float64)
+    rng = np.random.default_rng(seed)
+
+    losses = []  # (n_models+1, S) — target model is the last row
+    for gp in base_gps:
+        samples = gp.sample(target_x, n_samples, rng)
+        losses.append(_ranking_loss(samples, target_y))
+    loo = target_gp.loo_samples(n_samples, rng)
+    target_loss = _ranking_loss(loo, target_y)
+    losses.append(target_loss)
+    loss = np.stack(losses)                       # (K+1, S)
+
+    # Weight-dilution guard: a base model is unusable in sample s when its
+    # loss exceeds the target model's 95th-percentile loss.
+    cut = np.percentile(target_loss, dilution_percentile)
+    loss[:-1][loss[:-1] > cut] = np.inf
+
+    # a_i = fraction of samples where model i attains the minimum loss
+    # (ties split uniformly among the argmins).
+    k1, s = loss.shape
+    weights = np.zeros(k1)
+    mins = loss.min(axis=0)
+    for col in range(s):
+        winners = np.flatnonzero(loss[:, col] == mins[col])
+        weights[winners] += 1.0 / len(winners)
+    weights /= s
+
+    gps = list(base_gps) + [target_gp]
+    keep = weights > 1e-3
+    if not np.any(keep):  # pragma: no cover
+        keep = np.ones_like(weights, bool)
+    w = np.where(keep, weights, 0.0)
+    w = w / w.sum()
+    return RGPEnsemble(gps, w)

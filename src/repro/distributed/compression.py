@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantization: each tensor is quantized per 256-value block with an
+fp32 scale (max-abs). The quantization residual is carried in an error-
+feedback buffer and added back before the next quantization, so the scheme is
+unbiased over time (EF-SGD). On a real deployment the int8 payload is what
+crosses the pod interconnect (4x wire reduction for the cross-pod gradient
+all-reduce); here the quantize->dequantize pair runs inside the train step so
+convergence behaviour is exactly what production would see, and the
+collective itself stays in XLA's lap (see DESIGN.md §Perf for where the wire
+term shows up in the roofline).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape, size
+                     ) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def ef_init(params) -> Any:
+    """Zero error-feedback buffers shaped like the gradients."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def compress_decompress(grads, ef_state):
+    """Apply int8 EF compression to a gradient pytree.
+
+    Returns (compressed-then-restored grads, new EF buffers). The restored
+    grads are what the optimizer consumes; the difference rides in EF.
+    """
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize_leaf(corrected)
+        restored = _dequantize_leaf(q, scale, g.shape, g.size)
+        return restored.astype(g.dtype), corrected - restored
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compression_ratio() -> float:
+    """Wire bytes ratio vs fp32 (int8 payload + fp32 scale per block)."""
+    return (BLOCK * 1 + 4) / (BLOCK * 4)

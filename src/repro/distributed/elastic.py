@@ -1,0 +1,38 @@
+"""Elastic rescaling: move a sharded pytree between mesh topologies.
+
+Losing a pod (512 -> 256 chips) or growing back is a re-placement of every
+leaf under the *same* PartitionSpec rules on the new mesh. jax.device_put
+handles the data movement; the specs come from the same rule tables the
+dry-run proves out, so an elastic restart is exactly "restore checkpoint
+with the new mesh's shardings" (see training.ft / training.checkpoint).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from .sharding import param_shardings
+
+
+def rescale(tree, new_mesh: Mesh, *, shardings: Optional[object] = None):
+    """Re-place ``tree`` onto ``new_mesh`` (defaults to the param rules)."""
+    sh = shardings if shardings is not None \
+        else param_shardings(new_mesh, tree)
+    return jax.device_put(tree, sh)
+
+
+def surviving_mesh(mesh: Mesh, lost_axis: str = "pod"):
+    """The mesh that remains after losing one slice along ``lost_axis``.
+
+    With the production (pod=2, data=16, model=16) mesh, losing a pod
+    leaves the single-pod (data=16, model=16) mesh — the dry-run proves
+    both compile, so the elastic path is a pure restore-and-reshard."""
+    if lost_axis not in mesh.axis_names:
+        return mesh
+    import numpy as np
+    axis = mesh.axis_names.index(lost_axis)
+    devs = np.take(mesh.devices, 0, axis=axis)
+    names = tuple(n for n in mesh.axis_names if n != lost_axis)
+    return Mesh(devs, names)

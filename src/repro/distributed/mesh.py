@@ -1,0 +1,45 @@
+"""Mesh axis conventions and helpers.
+
+Axes:
+  * ``pod``   — across pods (pure data parallelism; gradient all-reduce only)
+  * ``data``  — within-pod batch/FSDP axis
+  * ``model`` — tensor/expert parallel axis
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+``make_production_mesh`` lives in :mod:`repro.launch.mesh` (kept import-free
+of device state); this module owns the logical-axis vocabulary and sharding
+rule tables used by the model zoo.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+POD, DATA, MODEL = "pod", "data", "model"
+
+#: logical activation axes
+BATCH_AXES: Tuple[str, ...] = (POD, DATA)   # batch shards over pod+data
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec for a leading batch dimension on this mesh."""
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def has_pod_axis(mesh: Mesh) -> bool:
+    return POD in mesh.axis_names
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,256 @@
+"""Sharding rules: logical axes -> mesh axes, param specs, activation hooks.
+
+Two mechanisms, both MaxText-style:
+
+* **Parameter specs** — :func:`param_specs` walks a parameter pytree and
+  pattern-matches leaf paths against :data:`PARAM_RULES` (right-aligned, so
+  stacked-layer leading axes pad with ``None``). The result feeds
+  ``jax.jit(in_shardings=...)`` and the checkpoint layer.
+* **Activation constraints** — models call :func:`shard` with *logical* axis
+  names; inside a :func:`sharding_context` these resolve through
+  :data:`LOGICAL_RULES` to ``with_sharding_constraint``; outside any context
+  they are no-ops (single-device tests never see a mesh).
+
+Changing either table is the primary §Perf hillclimbing lever.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# logical activation axes
+# --------------------------------------------------------------------------
+#: logical name -> mesh axis (or tuple of axes, or None = replicated)
+LOGICAL_RULES: Dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "ssm_heads": "model",
+    "state": None,
+    "kv_seq": None,
+    "latent": None,
+    # Fallback axis for KV caches whose head count cannot shard on "model"
+    # (GQA kv_heads < TP degree). None = replicate (baseline); the §Perf
+    # hillclimb maps it to "model" (sequence-sharded KV, partial-score
+    # attention) — see EXPERIMENTS.md §Perf.
+    "kv_seq_model": None,
+}
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[Dict[str, object]] = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, {**LOGICAL_RULES, **(rules or {})})
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    state = getattr(_ctx, "state", None)
+    return state[0] if state else None
+
+
+def _resolve(mesh: Mesh, rules: Dict[str, object],
+             logical: Sequence[Optional[str]]) -> P:
+    axes = []
+    for name in logical:
+        if name is None:
+            axes.append(None)
+            continue
+        mapped = rules.get(name)
+        if mapped is None:
+            axes.append(None)
+        elif isinstance(mapped, tuple):
+            live = tuple(a for a in mapped if a in mesh.axis_names)
+            axes.append(live if len(live) > 1 else
+                        (live[0] if live else None))
+        else:
+            axes.append(mapped if mapped in mesh.axis_names else None)
+    return P(*axes)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec axes whose mesh extent does not divide the dim (e.g. a
+    504-way vocab on a 16-way model axis, or 8 KV heads on 16 TP ranks —
+    those dims stay replicated)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                          - len(spec))):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain activation ``x`` to the logical axes (no-op w/o context).
+    The spec right-aligns to x's rank and non-dividing axes fall back to
+    replicated."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    logical = tuple(logical)
+    if len(logical) > x.ndim:
+        logical = logical[-x.ndim:]
+    elif len(logical) < x.ndim:
+        logical = (None,) * (x.ndim - len(logical)) + logical
+    spec = sanitize_spec(mesh, _resolve(mesh, rules, logical), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter sharding rules (right-aligned patterns)
+# --------------------------------------------------------------------------
+#: (path regex, right-aligned spec). First match wins.
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"embed/table$", ("model", None)),
+    (r"frontend/", (None,)),
+    (r"experts/(gate|up)/w$", ("model", "data", None)),
+    (r"experts/down/w$", ("model", None, "data")),
+    (r"router/w$", (None, None)),
+    (r"(wq|wk|wv|wuq)/w$", ("data", "model")),
+    (r"(wq|wk|wv|wuq)/b$", ("model",)),
+    (r"(gate|up)/w$", ("data", "model")),
+    (r"(wo|down)/w$", ("model", "data")),
+    (r"(wo|down)/b$", (None,)),
+    (r"wdkv/w$", ("data", None)),
+    (r"(wuk|wuv)/w$", (None, "model")),
+    (r"lm_head/w$", ("data", "model")),
+    (r"(in_z|in_x)/w$", ("data", "model")),
+    (r"(in_bc|in_dt)/w$", ("data", None)),
+    (r"conv_x_w$", (None, "model")),
+    (r"out_proj/w$", ("model", "data")),
+    (r"proj/w$", (None, "data")),
+    # norms, scalars, conv/bias leftovers: replicated
+    (r".*", (None,)),
+)
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    for pattern, spec in PARAM_RULES:
+        if re.search(pattern, path):
+            spec = tuple(spec)
+            if len(spec) > ndim:
+                spec = spec[-ndim:] if ndim else ()
+            return P(*((None,) * (ndim - len(spec)) + spec))
+    return P(*((None,) * ndim))  # pragma: no cover
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params) -> object:
+    """PartitionSpec pytree matching ``params`` structure."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), leaf.ndim), params)
+
+
+def param_shardings(mesh: Mesh, params) -> object:
+    specs = param_specs(params)
+    return jax.tree.map(
+        lambda spec, leaf: NamedSharding(
+            mesh, sanitize_spec(mesh, spec, leaf.shape)),
+        specs, params)
+
+
+# --------------------------------------------------------------------------
+# decode-cache sharding rules (logical axes, resolved against the mesh)
+# --------------------------------------------------------------------------
+#: (path regex, ordered list of right-aligned LOGICAL spec alternatives).
+#: The first alternative whose every named axis divides the leaf is used —
+#: e.g. a GQA cache with 8 KV heads on a 16-way model axis cannot
+#: head-shard, so it falls back to sharding the *sequence* dim on "model"
+#: (partial-score attention; GSPMD inserts the LSE-merge collectives). This
+#: is what keeps per-device KV traffic at cache/256 instead of replicating
+#: the cache — the dominant decode roofline term.
+CACHE_RULES: Tuple[Tuple[str, Tuple[Tuple, ...]], ...] = (
+    (r"(^|/)(k|v)$", (("batch", None, "kv_heads", None),
+                      ("batch", "kv_seq_model", None, None))),
+    (r"c_kv$", (("batch", "kv_seq_model", None),)),
+    (r"k_rope$", (("batch", "kv_seq_model", None),)),
+    (r"conv_x$", (("batch", None, "ssm_heads"),)),
+    (r"conv_bc$", (("batch", None, None),)),
+    (r"ssd$", (("batch", "ssm_heads", None, None),)),
+    (r"index$", ((),)),
+    (r".*", (("batch", None, None),)),
+)
+
+
+def cache_specs(mesh: Mesh, cache,
+                rules: Optional[Dict[str, object]] = None) -> object:
+    """PartitionSpec pytree for a decode cache (leaves right-aligned)."""
+    table = {**LOGICAL_RULES, **(rules or {})}
+
+    def _try(logical, leaf):
+        logical = tuple(logical)
+        if len(logical) > leaf.ndim:
+            logical = logical[-leaf.ndim:] if leaf.ndim else ()
+        logical = (None,) * (leaf.ndim - len(logical)) + logical
+        spec = _resolve(mesh, table, logical)
+        ok = all(e is None or dim % _axis_size(mesh, e) == 0
+                 for dim, e in zip(leaf.shape,
+                                   tuple(spec) + (None,) * leaf.ndim))
+        return spec, ok
+
+    def leaf_spec(path, leaf):
+        pstr = _path_str(path)
+        for pattern, alternatives in CACHE_RULES:
+            if re.search(pattern, pstr):
+                first = None
+                for logical in alternatives:
+                    spec, ok = _try(logical, leaf)
+                    if first is None:
+                        first = spec
+                    if ok:
+                        return spec
+                return sanitize_spec(mesh, first, leaf.shape)
+        return P(*((None,) * leaf.ndim))  # pragma: no cover
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def cache_shardings(mesh: Mesh, cache,
+                    rules: Optional[Dict[str, object]] = None) -> object:
+    specs = cache_specs(mesh, cache, rules)
+    return jax.tree.map(
+        lambda spec, leaf: NamedSharding(
+            mesh, sanitize_spec(mesh, spec, leaf.shape)),
+        specs, cache)

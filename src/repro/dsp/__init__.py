@@ -1,0 +1,16 @@
+"""Paper-faithful DSP substrate: simulator, workloads, baselines, harness."""
+from .baselines import (DS2Controller, ReactiveController, StaticController,
+                        baseline_config)
+from .executor import DSPExecutor, ProfileCost
+from .runner import FailureRecord, RunResult, run_experiment
+from .simulator import (MAX_PARALLELISM, ClusterModel, JobConfig, SimJob,
+                        measure_recovery)
+from .workloads import Trace, constant, tsw_like, ysb_like
+
+__all__ = [
+    "ClusterModel", "JobConfig", "SimJob", "MAX_PARALLELISM",
+    "measure_recovery", "Trace", "constant", "ysb_like", "tsw_like",
+    "DSPExecutor", "ProfileCost", "StaticController", "ReactiveController",
+    "DS2Controller", "baseline_config", "run_experiment", "RunResult",
+    "FailureRecord",
+]

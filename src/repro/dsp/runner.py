@@ -1,0 +1,194 @@
+"""Experiment harness replicating the paper's evaluation protocol (§3).
+
+18-hour workload traces, 23 timeout failures injected at 45-minute intervals,
+1-minute metric windows, 10-minute optimization intervals for Demeter.
+Collects everything Figures 5/6 and Table 3 report: latency distributions,
+per-failure recovery times (with NR for reconfiguration overlap and the
+6-minute cap), cumulative CPU/memory usage (profiling cost separately) and
+scale-out decisions over time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.config_space import paper_flink_space
+from ..core.demeter import DemeterController, DemeterHyperParams
+from .baselines import (DS2Controller, ReactiveController, StaticController,
+                        baseline_config)
+from .executor import DSPExecutor
+from .simulator import ClusterModel, JobConfig
+from .workloads import Trace
+
+FAILURE_INTERVAL_S = 45 * 60.0
+RECOVERY_CAP_S = 360.0           # "6m+" in Table 3
+METRIC_WINDOW_S = 60.0
+OPT_INTERVAL_S = 600.0
+
+
+@dataclass
+class FailureRecord:
+    t_inject: float
+    workload: float
+    recovery_s: Optional[float]   # None => NR (reconfig overlapped)
+    capped: bool = False          # True => exceeded the 6-minute cap
+
+
+@dataclass
+class RunResult:
+    method: str
+    trace: str
+    times: np.ndarray
+    rates: np.ndarray
+    latencies: np.ndarray
+    usage_cpu: np.ndarray         # cores in use (target job)
+    usage_mem_mb: np.ndarray
+    workers: np.ndarray
+    failures: List[FailureRecord]
+    n_reconfigurations: int
+    profile_cpu_s: float = 0.0
+    profile_mem_mb_s: float = 0.0
+
+    # -- summary helpers used by benchmarks/tests ---------------------------
+    def cumulative_cpu_s(self, include_profiling: bool = True) -> float:
+        dt = float(self.times[1] - self.times[0]) if len(self.times) > 1 else 1.0
+        total = float(np.sum(self.usage_cpu) * dt)
+        return total + (self.profile_cpu_s if include_profiling else 0.0)
+
+    def cumulative_mem_mb_s(self, include_profiling: bool = True) -> float:
+        dt = float(self.times[1] - self.times[0]) if len(self.times) > 1 else 1.0
+        total = float(np.sum(self.usage_mem_mb) * dt)
+        return total + (self.profile_mem_mb_s if include_profiling else 0.0)
+
+    def recovery_times(self) -> List[Optional[float]]:
+        return [f.recovery_s for f in self.failures]
+
+    def latency_ecdf(self) -> tuple:
+        lat = np.sort(self.latencies[np.isfinite(self.latencies)])
+        return lat, np.arange(1, len(lat) + 1) / len(lat)
+
+    def frac_latency_below(self, threshold_s: float) -> float:
+        lat = self.latencies[np.isfinite(self.latencies)]
+        return float(np.mean(lat < threshold_s)) if len(lat) else 0.0
+
+
+def run_experiment(trace: Trace, method: str, *,
+                   model: Optional[ClusterModel] = None,
+                   hp: Optional[DemeterHyperParams] = None,
+                   seed: int = 0,
+                   duration_s: Optional[float] = None) -> RunResult:
+    """Run one (trace, method) cell of the paper's evaluation."""
+    model = model or ClusterModel()
+    cmax = JobConfig()                     # paper §3.2 C_max
+    execu = DSPExecutor(model, cmax, seed=seed, dt=trace.dt_s)
+    duration = duration_s or trace.duration_s
+
+    demeter: Optional[DemeterController] = None
+    baseline = None
+    if method == "demeter":
+        demeter = DemeterController(paper_flink_space(), execu,
+                                    hp=hp or DemeterHyperParams())
+    elif method == "static":
+        baseline = StaticController(cmax)
+    elif method == "reactive":
+        baseline = ReactiveController()
+        execu.reconfigure(baseline_config(12).to_dict())  # HPA starts mid-range
+    elif method == "ds2":
+        baseline = DS2Controller()
+        execu.reconfigure(baseline_config(12).to_dict())
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    dt = trace.dt_s
+    n_steps = int(duration / dt)
+    failure_times = [FAILURE_INTERVAL_S * (k + 1)
+                     for k in range(int(duration / FAILURE_INTERVAL_S))]
+
+    times = np.zeros(n_steps)
+    rates = np.zeros(n_steps)
+    lats = np.zeros(n_steps)
+    ucpu = np.zeros(n_steps)
+    umem = np.zeros(n_steps)
+    workers = np.zeros(n_steps)
+    failures: List[FailureRecord] = []
+    n_reconf_baseline = 0
+
+    pending: Optional[FailureRecord] = None
+    pending_reconf_count = 0
+    next_failure = 0
+    last_ingest = 0.0
+    last_opt = 0.0
+    prof_interval = (demeter.hp.profile_interval_s if demeter
+                     else OPT_INTERVAL_S)
+    last_prof = OPT_INTERVAL_S / 2.0   # async offset between the 2 processes
+
+    for i in range(n_steps):
+        t = i * dt
+        rate = trace.rate_at(t)
+        m = execu.step(rate)
+
+        times[i], rates[i], lats[i] = t, rate, m["latency"]
+        ucpu[i], umem[i] = m["usage_cpu"], m["usage_mem_mb"]
+        workers[i] = execu.job.config.workers
+
+        # -- failure injection + ground-truth recovery measurement ----------
+        if next_failure < len(failure_times) and t >= failure_times[next_failure]:
+            execu.job.inject_failure()
+            pending = FailureRecord(t_inject=t, workload=rate, recovery_s=None)
+            pending_reconf_count = (demeter.n_reconfigurations
+                                    if demeter else n_reconf_baseline)
+            next_failure += 1
+        elif pending is not None:
+            elapsed = t - pending.t_inject
+            reconf_now = (demeter.n_reconfigurations
+                          if demeter else n_reconf_baseline)
+            if reconf_now != pending_reconf_count:
+                pending.recovery_s = None          # NR: reconfig overlapped
+                failures.append(pending)
+                pending = None
+            elif execu.job.caught_up:
+                pending.recovery_s = elapsed
+                failures.append(pending)
+                pending = None
+            elif elapsed > RECOVERY_CAP_S * 2:
+                pending.recovery_s = float("inf")  # "6m+"
+                pending.capped = True
+                failures.append(pending)
+                pending = None
+
+        # -- controllers -----------------------------------------------------
+        if demeter is not None:
+            if t - last_ingest >= METRIC_WINDOW_S:
+                last_ingest = t
+                obs = execu.observe()
+                if obs:
+                    demeter.ingest(obs)
+            if t - last_prof >= prof_interval:
+                last_prof = t
+                demeter.profiling_step()
+            if t - last_opt >= OPT_INTERVAL_S:
+                last_opt = t
+                demeter.optimization_step()
+        elif baseline is not None:
+            new = baseline.decide(t, execu.window(METRIC_WINDOW_S),
+                                  execu.job.config)
+            if new is not None and new != execu.job.config:
+                execu.job.reconfigure(new,
+                                      restart_s=getattr(baseline, "restart_s",
+                                                        None))
+                n_reconf_baseline += 1
+
+    if pending is not None:
+        failures.append(pending)
+
+    return RunResult(
+        method=method, trace=trace.name, times=times, rates=rates,
+        latencies=lats, usage_cpu=ucpu, usage_mem_mb=umem, workers=workers,
+        failures=failures,
+        n_reconfigurations=(demeter.n_reconfigurations if demeter
+                            else n_reconf_baseline),
+        profile_cpu_s=execu.profile_cost.cpu_s,
+        profile_mem_mb_s=execu.profile_cost.mem_mb_s,
+    )

@@ -1,0 +1,219 @@
+"""Discrete-event simulation of a Flink-style DSP job (paper §3 substrate).
+
+The paper evaluates Demeter on a 5-node Flink/Kubernetes cluster. Repro band
+5 ("laptop-scale pure-algorithm build fully works") means the cluster itself
+is simulated: a calibrated queueing model of a streaming job with Kafka-like
+consumer lag, checkpoint/rollback recovery, restarts on reconfiguration and
+timeout-failure injection. Calibration targets the paper's observables:
+
+* static C_max (24 workers x 1 core x 4096 MB, 10 s checkpoints) sustains the
+  full 25K-80K events/s range with ~1 s latencies and ~95 s recoveries;
+* under-provisioned configurations back up (latency explodes with consumer
+  lag) and may never catch up (the paper's "6m+" entries);
+* reconfigurations cost a restart (savepoint, redeploy, catch-up) — frequent
+  rescaling hurts, which is the behaviour Demeter exploits.
+
+The model is intentionally smooth in its five parameters so the interactions
+the paper highlights exist: slots multiply per-worker throughput sub-linearly
+(local parallelism helps until cores saturate), memory has saturating
+returns plus a pressure penalty, short checkpoint intervals tax throughput
+but shorten replay after failures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+#: Parallelism cap (Kafka partitions / max parallelism in the paper's setup).
+MAX_PARALLELISM = 24
+
+
+@dataclass(frozen=True)
+class JobConfig:
+    """The five Demeter-tuned parameters (paper §1)."""
+
+    workers: int = 24
+    cpu_cores: int = 1
+    memory_mb: int = 4096
+    task_slots: int = 1
+    checkpoint_interval_s: float = 10.0
+
+    @staticmethod
+    def from_dict(d: Mapping[str, float]) -> "JobConfig":
+        return JobConfig(workers=int(d["workers"]),
+                         cpu_cores=int(d["cpu_cores"]),
+                         memory_mb=int(d["memory_mb"]),
+                         task_slots=int(d["task_slots"]),
+                         checkpoint_interval_s=float(d["checkpoint_interval_s"]))
+
+    def to_dict(self) -> Dict[str, float]:
+        return {"workers": float(self.workers), "cpu_cores": float(self.cpu_cores),
+                "memory_mb": float(self.memory_mb),
+                "task_slots": float(self.task_slots),
+                "checkpoint_interval_s": float(self.checkpoint_interval_s)}
+
+
+@dataclass(frozen=True)
+class ClusterModel:
+    """Calibration constants for the queueing/recovery model."""
+
+    base_rate_per_core: float = 9000.0   # events/s one core/slot can push
+    cpu_exponent: float = 0.85           # sub-linear core scaling within a slot
+    slot_exponent: float = 0.15          # local-parallelism pipelining gain
+    mem_half_mb: float = 500.0           # memory factor half-saturation point
+    mem_exponent: float = 1.2
+    checkpoint_cost_s: float = 1.2       # barrier cost per checkpoint
+    base_latency_s: float = 0.55         # fully idle pipeline latency
+    queue_gamma: float = 0.6             # latency growth with utilization
+    failure_detect_s: float = 20.0       # Flink taskmanager timeout (paper §3.1)
+    redeploy_s: float = 45.0             # pod re-schedule + job restart
+    restore_mb_per_s: float = 600.0      # state restore bandwidth per worker
+    reconfig_restart_s: float = 45.0     # savepoint + redeploy on reconfigure
+    cpu_idle_frac: float = 0.35          # JVM/framework floor per allocated core
+    state_per_krate_mb: float = 18.0     # state size scales with workload rate
+    noise: float = 0.02                  # multiplicative capacity/latency noise
+    latency_cap_s: float = 120.0
+
+    # -- static surfaces -----------------------------------------------------
+    def capacity(self, cfg: JobConfig) -> float:
+        """Sustainable events/s for a configuration (pre-noise)."""
+        slots_total = min(cfg.workers * cfg.task_slots, MAX_PARALLELISM)
+        workers_used = min(cfg.workers, slots_total)
+        slots_per_worker = slots_total / max(workers_used, 1)
+        mem_per_slot = cfg.memory_mb / max(cfg.task_slots, 1)
+        mem_f = 1.0 / (1.0 + (self.mem_half_mb / mem_per_slot) ** self.mem_exponent)
+        per_worker = (self.base_rate_per_core
+                      * cfg.cpu_cores ** self.cpu_exponent
+                      * slots_per_worker ** self.slot_exponent
+                      * mem_f)
+        ckpt_f = 1.0 / (1.0 + self.checkpoint_cost_s
+                        / max(cfg.checkpoint_interval_s, 1e-3))
+        return workers_used * per_worker * ckpt_f
+
+    def state_size_mb(self, rate: float) -> float:
+        return self.state_per_krate_mb * rate / 1000.0
+
+    def allocated_cpu(self, cfg: JobConfig) -> float:
+        return cfg.workers * cfg.cpu_cores
+
+    def allocated_mem_mb(self, cfg: JobConfig) -> float:
+        return float(cfg.workers * cfg.memory_mb)
+
+
+@dataclass
+class SimJob:
+    """One running streaming job: queueing state + failure machinery."""
+
+    model: ClusterModel
+    config: JobConfig
+    seed: int = 0
+    time_s: float = 0.0
+    lag_events: float = 0.0              # consumer lag (backlog)
+    downtime_left_s: float = 0.0         # restart in progress when > 0
+    since_checkpoint_s: float = 0.0
+    rng: np.random.Generator = field(init=False)
+    #: telemetry of the last step
+    last: Dict[str, float] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.rng = np.random.default_rng(self.seed)
+
+    # ------------------------------------------------------------------
+    def step(self, rate: float, dt: float) -> Dict[str, float]:
+        """Advance the job by ``dt`` seconds under arrival ``rate`` (ev/s)."""
+        self.time_s += dt
+        noise = 1.0 + self.model.noise * self.rng.standard_normal()
+        cap = self.model.capacity(self.config) * max(noise, 0.5)
+
+        if self.downtime_left_s > 0:
+            # Job down: nothing processed, lag accumulates.
+            self.downtime_left_s = max(self.downtime_left_s - dt, 0.0)
+            self.lag_events += rate * dt
+            throughput = 0.0
+        else:
+            self.since_checkpoint_s += dt
+            if self.since_checkpoint_s >= self.config.checkpoint_interval_s:
+                self.since_checkpoint_s = 0.0
+            # Process arrivals plus as much backlog as capacity allows.
+            achievable = cap * dt
+            demand = rate * dt + self.lag_events
+            processed = min(achievable, demand)
+            self.lag_events = demand - processed
+            throughput = processed / dt
+
+        util = min(rate / max(cap, 1e-9), 1.5)
+        latency = self._latency(rate, cap, dt)
+        usage_cpu, usage_mem = self._usage(util, rate)
+        self.last = {
+            "rate": rate, "throughput": throughput, "capacity": cap,
+            "consumer_lag": self.lag_events, "latency": latency,
+            "utilization": util, "usage_cpu": usage_cpu,
+            "usage_mem_mb": usage_mem, "down": float(self.downtime_left_s > 0),
+        }
+        return self.last
+
+    def _latency(self, rate: float, cap: float, dt: float) -> float:
+        if self.downtime_left_s > 0:
+            return self.model.latency_cap_s
+        rho = min(rate / max(cap, 1e-9), 0.999)
+        base = self.model.base_latency_s * (1.0 + self.model.queue_gamma
+                                            * rho / (1.0 - rho))
+        backlog_delay = self.lag_events / max(cap, 1e-9)
+        mem_per_slot = self.config.memory_mb / max(self.config.task_slots, 1)
+        gc_penalty = 0.25 * (1024.0 / mem_per_slot) ** 2 * rho
+        noisy = (base + backlog_delay + gc_penalty) \
+            * (1.0 + 0.05 * abs(self.rng.standard_normal()))
+        return float(min(noisy, self.model.latency_cap_s))
+
+    def _usage(self, util: float, rate: float) -> tuple:
+        m = self.model
+        f = m.cpu_idle_frac
+        cpu = m.allocated_cpu(self.config) * (f + (1 - f) * min(util, 1.0))
+        state = m.state_size_mb(rate)
+        mem_needed = state / max(self.config.workers, 1) + 300.0
+        mem_frac = min(0.25 + 0.75 * mem_needed
+                       / max(self.config.memory_mb, 1.0), 1.0)
+        mem = m.allocated_mem_mb(self.config) * mem_frac
+        return float(cpu), float(mem)
+
+    # ------------------------------------------------------------------
+    def inject_failure(self) -> None:
+        """Timeout failure: detection + redeploy + state restore + replay."""
+        m = self.model
+        state = m.state_size_mb(self.last.get("rate", 0.0))
+        restore = state / (m.restore_mb_per_s * max(self.config.workers, 1))
+        self.downtime_left_s = m.failure_detect_s + m.redeploy_s + restore
+        # Rollback: events since the last checkpoint are replayed => lag.
+        self.lag_events += self.last.get("rate", 0.0) * self.since_checkpoint_s
+        self.since_checkpoint_s = 0.0
+
+    def reconfigure(self, config: JobConfig,
+                    restart_s: Optional[float] = None) -> None:
+        """Savepoint + redeploy with the new configuration."""
+        if config == self.config:
+            return
+        self.config = config
+        self.downtime_left_s = max(
+            self.downtime_left_s,
+            self.model.reconfig_restart_s if restart_s is None else restart_s)
+        self.since_checkpoint_s = 0.0
+
+    @property
+    def caught_up(self) -> bool:
+        return self.downtime_left_s <= 0 and self.lag_events < 1.0
+
+
+def measure_recovery(job: SimJob, rate_fn, t0: float, dt: float,
+                     timeout_s: float = 360.0) -> Optional[float]:
+    """Ground-truth recovery time: failure onset -> caught back up to the
+    head of the queue (paper §2.3's definition). None = exceeded timeout."""
+    job.inject_failure()
+    t = 0.0
+    while t < timeout_s:
+        t += dt
+        job.step(rate_fn(t0 + t), dt)
+        if job.caught_up:
+            return t
+    return None

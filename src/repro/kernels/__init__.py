@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three parts: ``<name>.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), a jit wrapper in :mod:`ops`, and a pure-jnp oracle in
+:mod:`ref`. All kernels validate in interpret mode on CPU (this container)
+and target TPU v5e tiles (128-lane, MXU 128x128) for real deployment.
+"""
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .grouped_matmul import grouped_matmul, sort_tokens_for_experts
+from .rmsnorm import fused_rmsnorm
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention", "ssd_scan",
+           "grouped_matmul", "sort_tokens_for_experts", "fused_rmsnorm"]

@@ -1,0 +1,42 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Models call these when ``attention_impl == "pallas"``. On non-TPU backends
+the kernels execute in interpret mode (the validation path this container
+uses); on TPU they lower to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .grouped_matmul import grouped_matmul as _grouped_matmul
+from .rmsnorm import fused_rmsnorm as _fused_rmsnorm
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    return _flash_attention(q, k, v, causal=causal, interpret=_interpret())
+
+
+def decode_attention(q, k, v, lengths):
+    return _decode_attention(q, k, v, lengths, interpret=_interpret())
+
+
+def ssd_scan(x, dt, a_log, b, c, *, chunk: int = 256):
+    return _ssd_scan(x, dt, a_log, b, c, chunk=chunk,
+                     interpret=_interpret())
+
+
+def grouped_matmul(lhs, rhs, tile_expert, **kw):
+    return _grouped_matmul(lhs, rhs, tile_expert,
+                           interpret=_interpret(), **kw)
+
+
+def fused_rmsnorm(x, res, scale, **kw):
+    return _fused_rmsnorm(x, res, scale, interpret=_interpret(), **kw)

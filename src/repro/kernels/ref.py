@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose contracts).
+
+Each kernel test sweeps shapes/dtypes and asserts against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.attention import sdpa_reference
+from ..models.mamba2 import ssd_chunked_reference
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    return sdpa_reference(q, k, v, causal=causal)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Loop-over-batch oracle for ragged decode attention."""
+    outs = []
+    for i in range(q.shape[0]):
+        outs.append(sdpa_reference(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                   causal=False, kv_valid_len=lengths[i]))
+    return jnp.concatenate(outs, axis=0)
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, *, chunk: int = 256):
+    return ssd_chunked_reference(x, dt, a_log, b, c, chunk=chunk)
+
+
+def grouped_matmul_ref(lhs, rhs, tile_expert, blk_m: int = 128):
+    """out[i] = lhs[i] @ rhs[expert_of_tile(i)] (python loop over tiles)."""
+    m = lhs.shape[0]
+    out = np.zeros((m, rhs.shape[2]), np.float32)
+    lhs_np = np.asarray(lhs, np.float32)
+    rhs_np = np.asarray(rhs, np.float32)
+    for t, e in enumerate(np.asarray(tile_expert)):
+        lo, hi = t * blk_m, (t + 1) * blk_m
+        out[lo:hi] = lhs_np[lo:hi] @ rhs_np[e]
+    return jnp.asarray(out, lhs.dtype)
+
+
+def fused_rmsnorm_ref(x, res, scale, eps: float = 1e-6):
+    s = (x.astype(jnp.float32) + res.astype(jnp.float32))
+    var = jnp.mean(jnp.square(s), -1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype), s.astype(x.dtype)

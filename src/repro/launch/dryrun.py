@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+# NOTE: the XLA_FLAGS export above MUST precede every other import (jax locks
+# the device count at first init), hence no `from __future__` in this module.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the cell's step
+function with real parameter/optimizer/cache ShapeDtypeStructs (no
+allocation), compiles it, and records memory analysis, cost analysis and the
+collective-traffic breakdown that §Roofline consumes.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k \
+        --mesh single --out results/dryrun.json
+    python -m repro.launch.dryrun --all            # every supported cell
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config
+from ..distributed.sharding import (cache_shardings,
+                                    param_shardings, sharding_context)
+from ..models import decode_step, encode, prefill, train_loss
+from ..models.config import ModelConfig
+from ..training.train import TrainConfig, init_train_state, make_train_step
+from .mesh import make_production_mesh
+from .specs import SHAPES, cell_supported, input_specs
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    size = _DTYPE_BYTES.get(dt, 4)
+    for d in dims.split(","):
+        if d:
+            size *= int(d)
+    return size
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in an HLO dump."""
+    out = {c: 0 for c in COLLECTIVES}
+    # result shape = tuple or single:  %x = TYPE[...] op-name(
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+        r"(" + "|".join(COLLECTIVES) + r")[\.\(]")
+    for m in pat.finditer(hlo_text):
+        shapes, op = m.groups()
+        total = sum(_shape_bytes(s) for s in
+                    re.findall(r"[a-z0-9]+\[[0-9,]*\]", shapes))
+        out[op] += total
+    return out
+
+
+def _batch_shard(mesh, struct, batch_axes):
+    """Shard the leading dim over the batch axes when divisible."""
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    lead = struct.shape[0] if struct.shape else 1
+    if struct.shape and lead % n == 0 and lead >= n:
+        spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    else:
+        spec = P()
+    return NamedSharding(mesh, spec)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               cfg_override: Optional[ModelConfig] = None,
+               unroll: bool = False,
+               logical_rules: Optional[Dict[str, object]] = None,
+               donate: bool = True) -> Dict[str, object]:
+    """Lower + compile one cell; returns the §Dry-run / §Roofline record.
+
+    ``unroll=True`` fully unrolls the layer scans so cost_analysis and the
+    collective census count every layer (XLA's HloCostAnalysis visits a
+    while body once); the rolled form is the production/compile-proof path.
+    """
+    cfg = cfg_override or get_config(arch)
+    if unroll:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, scan_unroll=max(cfg.n_layers, 2))
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = input_specs(cfg, shape)
+    kind = spec["kind"]
+    params = spec["params"]
+    p_shard = param_shardings(mesh, params)
+
+    t0 = time.time()
+    with mesh, sharding_context(mesh, logical_rules):
+        if kind == "train":
+            tc = TrainConfig()
+            state = jax.eval_shape(
+                functools.partial(init_train_state, tc=tc), params)
+            s_shard = {"opt": {"m": p_shard, "v": p_shard,
+                               "step": NamedSharding(mesh, P())}}
+            step = make_train_step(cfg, tc)
+            in_shard = (p_shard, s_shard,
+                        jax.tree.map(lambda s: _batch_shard(mesh, s,
+                                                            batch_axes),
+                                     spec["inputs"]))
+            fn = jax.jit(step, in_shardings=in_shard,
+                         donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(params, state, spec["inputs"])
+        elif kind == "prefill":
+            b_shard = jax.tree.map(
+                lambda s: _batch_shard(mesh, s, batch_axes), spec["inputs"])
+            if cfg.supports_decode:
+                c_shard = cache_shardings(mesh, spec["cache"], logical_rules)
+                fn = jax.jit(lambda p, b, c: prefill(p, cfg, b, c),
+                             in_shardings=(p_shard, b_shard, c_shard),
+                             donate_argnums=(2,) if donate else ())
+                lowered = fn.lower(params, spec["inputs"], spec["cache"])
+            else:
+                fn = jax.jit(lambda p, b: encode(p, cfg, b),
+                             in_shardings=(p_shard, b_shard))
+                lowered = fn.lower(params, spec["inputs"])
+        else:  # decode
+            b_shard = jax.tree.map(
+                lambda s: _batch_shard(mesh, s, batch_axes), spec["inputs"])
+            c_shard = cache_shardings(mesh, spec["cache"], logical_rules)
+            fn = jax.jit(lambda p, t, c: decode_step(p, cfg, t["tokens"], c),
+                         in_shardings=(p_shard, b_shard, c_shard),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params, spec["inputs"], spec["cache"])
+
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_record = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        mem_record = {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "devices": int(mesh.size),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "collective_bytes": coll,
+        "collective_total": int(sum(coll.values())),
+        "memory": mem_record,
+        "n_hlo_lines": hlo.count("\n"),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans (roofline accounting)")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = f"{arch}/{shape}/{'multi' if multi else 'single'}"
+                if results.get(key, {}).get("status") == "ok":
+                    print(f"[skip cached] {key}")
+                    continue
+                print(f"[lower] {key}", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=multi,
+                                     unroll=args.unroll)
+                except Exception as e:  # record, keep going
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = (f" flops={rec.get('flops'):.3e}"
+                         f" coll={rec.get('collective_total', 0):.3e}"
+                         f" compile={rec.get('compile_s')}s"
+                         if status == "ok" else
+                         f" {rec.get('reason', rec.get('error', ''))[:120]}")
+                print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Runs the batched serving engine on a (reduced or full) config, replays a
+Poisson request trace, and optionally puts the Demeter controller in charge
+of the cluster configuration (replicas / TP / KV budget / slots / snapshot
+interval) — the paper's optimization loop driving an LLM fleet.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, smoke_config
+from ..core.config_space import tpu_serving_space
+from ..core.demeter import DemeterController, DemeterHyperParams
+from ..models import init_params
+from ..serving.autoscale import (ClusterModelParams, ServingCluster,
+                                 ServingExecutor, calibrate)
+from ..serving.engine import Request, ServingEngine
+
+
+def run_engine(cfg, args) -> None:
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, n_slots=args.slots,
+                        max_len=args.prompt_len + args.max_tokens + 8)
+    rng = np.random.default_rng(0)
+    t_start = time.monotonic()
+    next_arrival = 0.0
+    submitted = 0
+    while eng.metrics.completed < args.requests:
+        now = time.monotonic() - t_start
+        while submitted < args.requests and now >= next_arrival:
+            eng.submit(Request(
+                f"req-{submitted}",
+                rng.integers(0, cfg.vocab_size, args.prompt_len),
+                max_tokens=args.max_tokens,
+                arrival_s=time.monotonic()))
+            submitted += 1
+            next_arrival += rng.exponential(1.0 / args.rate)
+        eng.admit()
+        if eng.step() == 0:
+            time.sleep(0.005)
+    t = eng.telemetry()
+    print(f"[serve] completed={int(t['completed'])} "
+          f"p95_latency={t['p95_latency_s']:.3f}s "
+          f"mean_step={t['mean_step_s']*1e3:.1f}ms")
+
+
+def run_autoscaled(cfg, args) -> None:
+    print("[serve] calibrating replica profile (real jitted steps)...")
+    profile = calibrate(cfg, n_slots=4, prompt_len=16, steps=4)
+    print(f"  decode_step={profile.decode_step_s*1e3:.1f}ms "
+          f"prefill={profile.prefill_s*1e3:.1f}ms")
+    cluster = ServingCluster(profile, ClusterModelParams())
+    execu = ServingExecutor(cluster)
+    space = tpu_serving_space()
+    hp = DemeterHyperParams(segment_size=args.rate / 4,
+                            recovery_constraint_s=120.0)
+    demeter = DemeterController(space, execu, hp=hp)
+
+    rng = np.random.default_rng(1)
+    t, dt = 0.0, execu.dt
+    last_obs = last_opt = last_prof = 0.0
+    while t < args.duration_s:
+        t += dt
+        # diurnal-ish rate pattern
+        rate = args.rate * (0.6 + 0.4 * np.sin(2 * np.pi * t
+                                               / args.duration_s))
+        rate = max(rate + rng.normal(0, args.rate * 0.05), 0.1)
+        execu.step(rate)
+        if t - last_obs >= 30:
+            last_obs = t
+            obs = execu.observe()
+            if obs:
+                demeter.ingest(obs)
+        if t - last_prof >= 240:
+            last_prof = t
+            demeter.profiling_step()
+        if t - last_opt >= 120:
+            last_opt = t
+            demeter.optimization_step()
+    print(f"[serve] demeter reconfigurations: {demeter.n_reconfigurations}")
+    print(f"  final config: {execu.current_config()}")
+    print(f"  final telemetry: {execu.observe()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="Demeter-controlled cluster simulation")
+    ap.add_argument("--duration-s", type=float, default=3600.0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.autoscale:
+        run_autoscaled(cfg, args)
+    else:
+        run_engine(cfg, args)
+
+
+if __name__ == "__main__":
+    main()

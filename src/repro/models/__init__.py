@@ -1,0 +1,12 @@
+"""Model zoo: 10 assigned architectures from a single ModelConfig schema."""
+from .config import (FrontendConfig, HybridConfig, MLAConfig, ModelConfig,
+                     MoEConfig, SSMConfig, param_count)
+from .transformer import (decode_step, encode, forward, init_cache,
+                          init_params, logits_from_hidden, prefill,
+                          train_loss)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "FrontendConfig", "param_count", "init_params", "forward", "train_loss",
+    "prefill", "decode_step", "encode", "init_cache", "logits_from_hidden",
+]

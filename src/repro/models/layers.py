@@ -1,0 +1,141 @@
+"""Shared neural building blocks for the 10-architecture model zoo.
+
+Pure-functional JAX: every module is an ``init_*`` returning a parameter
+pytree plus an ``apply``-style function. Parameters are plain nested dicts so
+they stack cleanly for scan-over-layers and shard via PartitionSpec trees.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: Optional[float] = None,
+               bias: bool = False, dtype=jnp.float32):
+    # NB: python-float scale (weak type) — numpy scalars would promote bf16.
+    scale = float(scale) if scale is not None else float(d_in) ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- norms -------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * (1.0 + p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# -- RoPE --------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]). x: (..., seq, heads, hd),
+    positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -- gated MLPs ---------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+                "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+                "down": dense_init(k3, d_ff, d_model, dtype=dtype)}
+    return {"up": dense_init(k1, d_model, d_ff, dtype=dtype),
+            "down": dense_init(k2, d_ff, d_model, dtype=dtype)}
+
+
+def mlp(p, x, kind: str):
+    from ..distributed.sharding import shard
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x), approximate=True) \
+            * dense(p["up"], x)
+    else:  # plain gelu (hubert-style encoder FFN)
+        h = jax.nn.gelu(dense(p["up"], x), approximate=True)
+    h = shard(h, "batch", None, "mlp")
+    return dense(p["down"], h)
+
+
+# -- embeddings ---------------------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(p, tokens, *, scale_by_dim: bool = False):
+    h = jnp.take(p["table"], tokens, axis=0)
+    if scale_by_dim:  # gemma multiplies embeddings by sqrt(d_model)
+        h = h * jnp.sqrt(jnp.asarray(h.shape[-1], h.dtype))
+    return h
+
+
+def unembed(p, h):
+    return h @ p["table"].T
+
+
+# -- losses -------------------------------------------------------------------
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None,
+                          z_loss: float = 0.0) -> jnp.ndarray:
+    """Token-mean CE in fp32 with optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss > 0.0:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        total = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(loss * mask) / total
+    return jnp.mean(loss)

@@ -1,0 +1,215 @@
+"""Mamba2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill use the chunked block decomposition: within a chunk the
+dual (attention-like) quadratic form, across chunks a linear recurrence on
+the per-head state (H, P, N). Decode is the O(1)-per-token recurrence on the
+cached state — the reason the ``long_500k`` cell is assigned to this family.
+The Pallas kernel in :mod:`repro.kernels.ssd_scan` implements the same
+chunked contraction with VMEM-tiled blocks; this module is the jnp
+reference and the dry-run path.
+
+The input projection is split into (z, x, BC, dt) weights — mathematically
+one matrix, but separate leaves shard cleanly: z/x column-parallel on the
+"model" axis (head-parallel SSD), BC/dt replicated (they are tiny and B/C
+are shared across heads within a group).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    gn = 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, gn
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d_in, n_heads, gn = _dims(cfg)
+    ks = jax.random.split(key, 9)
+    # dt bias: softplus^-1 of log-uniform [dt_min, dt_max] (mamba2 init).
+    dt = jnp.exp(jax.random.uniform(ks[0], (n_heads,), jnp.float32,
+                                    np.log(s.dt_min), np.log(s.dt_max)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a_init = jax.random.uniform(ks[1], (n_heads,), jnp.float32, 1.0, 16.0)
+    return {
+        "in_z": dense_init(ks[2], cfg.d_model, d_in, dtype=dtype),
+        "in_x": dense_init(ks[3], cfg.d_model, d_in, dtype=dtype),
+        "in_bc": dense_init(ks[4], cfg.d_model, gn, dtype=dtype),
+        "in_dt": dense_init(ks[5], cfg.d_model, n_heads, dtype=dtype),
+        "conv_x_w": jax.random.normal(ks[6], (s.d_conv, d_in), dtype) * 0.1,
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_bc_w": jax.random.normal(ks[7], (s.d_conv, gn), dtype) * 0.1,
+        "conv_bc_b": jnp.zeros((gn,), dtype),
+        "a_log": jnp.log(a_init),
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[8], d_in, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, width d_conv. x: (B, S, CH), w: (K, CH)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else pad[:, :0]
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked_reference(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x: (B, S, H, P); dt: (B, S, H); a_log: (H,);
+    b, c: (B, S, G, N) with heads split evenly across G groups.
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, seq, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert seq % chunk == 0, "sequence must be divisible by the SSD chunk"
+    nc, q = seq // chunk, chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    dtf = dt.astype(jnp.float32)
+    da = (dtf * a).reshape(bsz, nc, q, h)                    # log-decay/step
+    cum = jnp.cumsum(da, axis=2)                             # (B,NC,Q,H)
+
+    xdt = (x.astype(jnp.float32)
+           * dtf[..., None]).reshape(bsz, nc, q, h, p)
+    bg = b.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+    cg = c.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+
+    # Intra-chunk dual form: scores shared per group, decay per head.
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cg, bg)            # (B,NC,G,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=2)                         # (B,NC,H,Q,Q)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # q - k
+    l = jnp.exp(jnp.transpose(li, (0, 1, 4, 2, 3)))          # (B,NC,H,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask, cb * l, 0.0)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m, xdt)
+
+    # Chunk-final states + inter-chunk linear recurrence.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,NC,Q,H)
+    bh = jnp.repeat(bg, rep, axis=3).reshape(bsz, nc, q, h, n)
+    states = jnp.einsum("bckh,bckhp,bckhn->bchpn", decay_to_end, xdt, bh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,NC,H)
+
+    def scan_fn(h_prev, inp):
+        dec, st = inp
+        h_new = dec[:, :, None, None] * h_prev + st
+        return h_new, h_prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, h_prevs = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,NC,H,P,N)
+
+    ch = jnp.repeat(cg, rep, axis=3).reshape(bsz, nc, q, h, n)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", ch, h_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, seq, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """One-token recurrence. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    b, c: (B,G,N). Returns (y: (B,H,P), new_state)."""
+    h, g = x.shape[1], b.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a)                                 # (B,H)
+    bh = jnp.repeat(b.astype(jnp.float32), rep, axis=1)      # (B,H,N)
+    ch = jnp.repeat(c.astype(jnp.float32), rep, axis=1)
+    xdt = x.astype(jnp.float32) * dtf[..., None]
+    new_state = decay[..., None, None] * state \
+        + xdt[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
+                 cache: Optional[Dict[str, jnp.ndarray]] = None,
+                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: (B, S, d_model). cache: {"conv_x", "conv_bc", "ssd"}."""
+    s, d_in, n_heads, gn = _dims(cfg)
+    bsz, seq, _ = x.shape
+    z = dense(p["in_z"], x)
+    xr = dense(p["in_x"], x)
+    bc = dense(p["in_bc"], x)
+    dt = jax.nn.softplus(dense(p["in_dt"], x).astype(jnp.float32)
+                         + p["dt_bias"])
+
+    cx = cache["conv_x"] if cache is not None else None
+    cbc = cache["conv_bc"] if cache is not None else None
+    xr, new_cx = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"], cx)
+    bc, new_cbc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], cbc)
+
+    half = gn // 2
+    xs = xr.reshape(bsz, seq, n_heads, s.head_dim)
+    xs = shard(xs, "batch", None, "ssm_heads", None)
+    bs = bc[..., :half].reshape(bsz, seq, s.n_groups, s.d_state)
+    cs = bc[..., half:].reshape(bsz, seq, s.n_groups, s.d_state)
+
+    new_cache = None
+    if cache is not None and seq == 1:
+        y, new_state = ssd_decode_step(
+            cache["ssd"], xs[:, 0], dt[:, 0], p["a_log"], bs[:, 0], cs[:, 0])
+        y = y[:, None]
+        new_cache = {"conv_x": new_cx, "conv_bc": new_cbc, "ssd": new_state}
+    else:
+        # Pad to a chunk multiple; dt=0 on pads makes them exact no-ops
+        # (decay exp(0)=1, zero input contribution).
+        pad = (-seq) % s.chunk
+        if pad:
+            zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                   [(0, 0)] * (t.ndim - 2))
+            xs_p, dt_p, bs_p, cs_p = zf(xs), zf(dt), zf(bs), zf(cs)
+        else:
+            xs_p, dt_p, bs_p, cs_p = xs, dt, bs, cs
+        if cfg.attention_impl == "pallas":
+            from ..kernels import ops as kops
+            y, final = kops.ssd_scan(xs_p, dt_p, p["a_log"], bs_p, cs_p,
+                                     chunk=s.chunk)
+        else:
+            y, final = ssd_chunked_reference(xs_p, dt_p, p["a_log"], bs_p,
+                                             cs_p, chunk=s.chunk)
+        if pad:
+            y = y[:, :seq]
+        if cache is not None:
+            new_cache = {"conv_x": new_cx, "conv_bc": new_cbc, "ssd": final}
+
+    y = y + xs * p["d_skip"][:, None].astype(y.dtype)
+    y = shard(y, "batch", None, "ssm_heads", None)
+    y = y.reshape(bsz, seq, d_in)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out_proj"], y), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                     n_layers: Optional[int] = None):
+    s, d_in, n_heads, gn = _dims(cfg)
+    layers = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "conv_x": jnp.zeros((layers, batch, s.d_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((layers, batch, s.d_conv - 1, gn), dtype),
+        "ssd": jnp.zeros((layers, batch, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2 family).
+
+KV state is compressed into a ``kv_lora_rank``-dim latent per token plus one
+shared RoPE key of ``rope_head_dim`` — the cache holds 512+64 floats/token
+regardless of head count. Train/prefill materialize per-head keys/values
+(naive path); decode uses the *absorbed* formulation (W_uk folded into the
+query, W_uv applied after the latent-space attention), which reads only the
+compressed cache — the path that makes very long context decodes cheap.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -2.0 ** 30
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    q_dim = h * (m.nope_head_dim + m.rope_head_dim)
+    p = {
+        "wdkv": dense_init(ks[1], cfg.d_model,
+                           m.kv_lora_rank + m.rope_head_dim, dtype=dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wuk": dense_init(ks[2], m.kv_lora_rank, h * m.nope_head_dim,
+                          dtype=dtype),
+        "wuv": dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim,
+                          dtype=dtype),
+        "wo": dense_init(ks[4], h * m.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+    if m.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype=dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["wuq"] = dense_init(ks[5], m.q_lora_rank, q_dim, dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[0], cfg.d_model, q_dim, dtype=dtype)
+    return p
+
+
+def _queries(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    if m.q_lora_rank:
+        q = dense(p["wuq"], rmsnorm(p["q_norm"], dense(p["wdq"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(b, s, cfg.n_heads, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    ckr = dense(p["wdkv"], x)
+    c_kv = rmsnorm(p["kv_norm"], ckr[..., :m.kv_lora_rank])
+    k_rope = ckr[..., m.kv_lora_rank:][..., None, :]       # one shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(p, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray, *,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """cache: {"c_kv": (B, S, kv_lora), "k_rope": (B, S, rope_dim)}."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+
+    new_cache = None
+    if cache is not None:
+        from .attention import cache_update
+        idx = cache_index if cache_index is not None else jnp.asarray(0)
+        cc = cache_update(cache["c_kv"], c_kv, idx)
+        cr = cache_update(cache["k_rope"], k_rope, idx)
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        if s == 1:
+            out = _absorbed_decode(p, cfg, q_nope, q_rope, cc, cr, idx + 1)
+            return dense(p["wo"], out.reshape(b, s, -1)), new_cache
+        out = _naive(p, cfg, q_nope, q_rope, cc, cr,
+                     q_positions=positions, kv_valid_len=idx + s)
+    else:
+        out = _naive(p, cfg, q_nope, q_rope, c_kv, k_rope)
+    return dense(p["wo"], out.reshape(b, s, -1)), new_cache
+
+
+def _naive(p, cfg, q_nope, q_rope, c_kv, k_rope, *, q_positions=None,
+           kv_valid_len=None):
+    """Materialize per-head K/V from the latent (train/prefill path)."""
+    from .attention import attention_mask
+    m = cfg.mla
+    b, skv = c_kv.shape[0], c_kv.shape[1]
+    h = cfg.n_heads
+    k_nope = dense(p["wuk"], c_kv).reshape(b, skv, h, m.nope_head_dim)
+    v = dense(p["wuv"], c_kv).reshape(b, skv, h, m.v_head_dim)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.nope_head_dim + m.rope_head_dim,
+                                       jnp.float32))
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+
+    sq = q_nope.shape[1]
+    mask = attention_mask(b, sq, skv, causal=True, q_positions=q_positions,
+                          kv_valid_len=kv_valid_len)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+def _absorbed_decode(p, cfg, q_nope, q_rope, c_kv, k_rope, valid_len):
+    """Latent-space attention: never materializes per-head K/V."""
+    from .attention import attention_mask
+    m = cfg.mla
+    b, _, h, _ = q_nope.shape
+    wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    # Fold W_uk into the query: q_c = q_nope @ W_uk^T  -> latent space.
+    q_c = jnp.einsum("bshd,chd->bshc", q_nope, wuk)          # (B,1,H,rank)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.nope_head_dim + m.rope_head_dim,
+                                       jnp.float32))
+    scores = (jnp.einsum("bshc,btc->bhst", q_c, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = attention_mask(b, 1, c_kv.shape[1], causal=False,
+                          kv_valid_len=valid_len)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhst,btc->bshc", w, c_kv)              # latent context
+    wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    return jnp.einsum("bshc,chd->bshd", ctx, wuv)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, n_layers: Optional[int] = None):
+    m = cfg.mla
+    layers = n_layers if n_layers is not None else cfg.n_layers
+    return {"c_kv": jnp.zeros((layers, batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((layers, batch, max_len, m.rope_head_dim),
+                                dtype)}

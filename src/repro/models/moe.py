@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE-style: shared + fine-grained routed).
+
+Default path is capacity-based dispatch — scatter tokens into per-expert
+buffers of static shape (E, C, d), run stacked expert GEMMs, gather back.
+This keeps every shape static (jit/pjit-friendly), sharding the expert axis
+on the "model" mesh axis gives expert parallelism (GSPMD inserts the
+all-to-all), and compiled FLOPs stay proportional to N·k·d·f·capacity_factor
+instead of N·E·d·f. The Pallas grouped-GEMM kernel (repro.kernels) implements
+the drop-free sorted formulation for the perf path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from .layers import dense_init, mlp, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    e = cfg.moe
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    gates = ("gate", "up", "down") if cfg.mlp_kind in ("swiglu", "geglu") \
+        else ("up", "down")
+    keys = jax.random.split(k_experts, len(gates))
+    experts = {}
+    for name, kk in zip(gates, keys):
+        d_in, d_out = ((e.d_expert, cfg.d_model) if name == "down"
+                       else (cfg.d_model, e.d_expert))
+        experts[name] = {"w": jax.random.normal(
+            kk, (e.n_routed, d_in, d_out), dtype) / jnp.sqrt(d_in)}
+    p = {
+        "router": dense_init(k_router, cfg.d_model, e.n_routed, dtype=dtype),
+        "experts": experts,
+    }
+    if e.n_shared > 0:
+        p["shared"] = mlp_init(k_shared, cfg.d_model,
+                               e.n_shared * e.d_expert, cfg.mlp_kind, dtype)
+    return p
+
+
+def _expert_ffn(experts, h, kind: str):
+    """h: (E, C, d) -> (E, C, d) through stacked expert weights."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else \
+            lambda z: jax.nn.gelu(z, approximate=True)
+        inner = act(jnp.einsum("ecd,edf->ecf", h, experts["gate"]["w"])) \
+            * jnp.einsum("ecd,edf->ecf", h, experts["up"]["w"])
+    else:
+        inner = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h,
+                                       experts["up"]["w"]), approximate=True)
+    return jnp.einsum("ecf,efd->ecd", inner, experts["down"]["w"])
+
+
+def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *, drop_free: bool = False
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (..., d) -> (y, aux losses). Routing in fp32.
+
+    ``drop_free`` sizes buffers at the worst case (capacity = n tokens) so no
+    assignment is ever dropped — used for decode steps, where n is tiny and
+    capacity-dropping would make generation depend on batch composition.
+    """
+    e = cfg.moe
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    n = xt.shape[0]
+
+    logits = (xt @ p["router"]["w"]).astype(jnp.float32)      # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, e.top_k)              # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    if drop_free:
+        capacity = n                   # a token assigns each expert <= once
+    else:
+        capacity = max(
+            math.ceil(n * e.top_k * e.capacity_factor / e.n_routed),
+            e.top_k)
+    capacity = min(capacity, n)
+
+    # Position of each assignment within its expert's buffer. k-major order
+    # gives earlier top-k slots dispatch priority (standard behaviour).
+    flat_e = top_i.T.reshape(-1)                              # (k*N,)
+    onehot = jax.nn.one_hot(flat_e, e.n_routed, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1             # (k*N, E)
+    flat_pos = jnp.max(pos, axis=-1)                          # (k*N,)
+    keep = flat_pos < capacity
+    flat_w = top_w.T.reshape(-1) * keep
+
+    token_idx = jnp.tile(jnp.arange(n), e.top_k)
+    safe_pos = jnp.where(keep, flat_pos, capacity - 1)
+    # Scatter tokens into (E, C, d); dropped tokens contribute nothing.
+    # Sharding E on "model" = expert parallelism (all-to-all at this edge).
+    buf = jnp.zeros((e.n_routed, capacity, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        xt[token_idx] * keep[:, None].astype(x.dtype))
+    buf = shard(buf, "experts", "expert_cap", None)
+
+    h = _expert_ffn(p["experts"], buf, cfg.mlp_kind)          # (E, C, d)
+    h = shard(h, "experts", "expert_cap", None)
+
+    y = (h[flat_e, safe_pos] * flat_w[:, None].astype(x.dtype))
+    y = y.reshape(e.top_k, n, d).sum(0)
+
+    if e.n_shared > 0:
+        y = y + mlp(p["shared"], xt, cfg.mlp_kind)
+
+    # Aux losses: Switch-style load balancing + router z-loss.
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_i, e.n_routed, dtype=jnp.float32),
+                  axis=(0, 1)) * e.top_k
+    aux = {
+        "moe_aux_loss": e.aux_loss_coef * e.n_routed * jnp.sum(me * ce),
+        "moe_z_loss": e.router_z_loss
+        * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    return y.reshape(orig_shape), aux

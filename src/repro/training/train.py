@@ -1,0 +1,88 @@
+"""Train-step construction: grad accumulation, compression, optimizer.
+
+``make_train_step`` builds the jit-able pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatch accumulation (a lax.scan over microbatches — the
+standard memory/throughput lever) and optional int8 error-feedback gradient
+compression before the optimizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.compression import compress_decompress, ef_init
+from ..models import train_loss
+from ..models.config import ModelConfig
+from .optimizer import OptimizerConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    accum_steps: int = 1          # microbatches per step
+    compress_grads: bool = False  # int8 EF compression before the optimizer
+
+
+def init_train_state(params, tc: TrainConfig) -> Dict[str, Any]:
+    state = {"opt": adamw_init(params)}
+    if tc.compress_grads:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig
+                    ) -> Callable[[Any, Dict[str, Any], Dict[str, Any]],
+                                  Tuple[Any, Dict[str, Any],
+                                        Dict[str, jnp.ndarray]]]:
+    loss_fn = lambda p, b: train_loss(p, cfg, b)
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def single_grads(params, batch):
+        return grad_fn(params, batch)
+
+    def accum_grads(params, batch):
+        """Split the per-device batch into microbatches and scan."""
+        n = tc.accum_steps
+
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                b)
+
+        micro_batch = micro(batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                            params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero),
+                                            micro_batch)
+        scale = 1.0 / n
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(params, state, batch):
+        if tc.accum_steps > 1:
+            loss, grads = accum_grads(params, batch)
+        else:
+            loss, grads = single_grads(params, batch)
+        metrics = {"loss": loss}
+        if tc.compress_grads:
+            grads, new_ef = compress_decompress(grads, state["ef"])
+        params, opt, opt_metrics = adamw_update(tc.optimizer, grads,
+                                                state["opt"], params)
+        metrics.update(opt_metrics)
+        new_state = {"opt": opt}
+        if tc.compress_grads:
+            new_state["ef"] = new_ef
+        return params, new_state, metrics
+
+    return train_step

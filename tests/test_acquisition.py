@@ -1,0 +1,119 @@
+"""Acquisition-function tests: exact EHVI vs Monte Carlo, HV properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats
+
+from repro.core import (ehvi_2d, expected_improvement, hypervolume_2d,
+                        pareto_front_2d, prob_feasible,
+                        select_profiling_batch)
+
+
+def _mc_ehvi(mu, sd, front, ref, n=200_000, seed=0):
+    """Monte Carlo oracle via the strip decomposition."""
+    rng = np.random.default_rng(seed)
+    z = rng.normal(mu, sd, (n, 2))
+    front = pareto_front_2d(front)
+    edges = np.concatenate([[-np.inf], front[:, 0], [ref[0]]])
+    heights = np.concatenate([[ref[1]], front[:, 1]])
+    w = np.clip(np.minimum(edges[1:], ref[0])[None, :]
+                - np.maximum(edges[:-1][None, :], z[:, :1]), 0, None)
+    h = np.clip(heights[None, :] - z[:, 1:2], 0, None)
+    return float((w * h).sum(1).mean())
+
+
+class TestHypervolume:
+    def test_known_value(self):
+        front = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+        assert hypervolume_2d(front, (5.0, 5.0)) == pytest.approx(13.0)
+
+    def test_dominated_points_ignored(self):
+        front = np.array([[1.0, 1.0], [2.0, 2.0]])
+        assert hypervolume_2d(front, (4.0, 4.0)) == pytest.approx(9.0)
+
+    def test_empty(self):
+        assert hypervolume_2d(np.zeros((0, 2)), (1.0, 1.0)) == 0.0
+
+    @given(st.lists(st.tuples(st.floats(0, 4), st.floats(0, 4)),
+                    min_size=1, max_size=10))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_under_additional_points(self, pts):
+        pts = np.asarray(pts)
+        ref = (5.0, 5.0)
+        hv_all = hypervolume_2d(pts, ref)
+        hv_head = hypervolume_2d(pts[:max(len(pts) // 2, 1)], ref)
+        assert hv_all >= hv_head - 1e-9
+
+
+class TestEHVI:
+    @pytest.mark.parametrize("mu,sd", [
+        ((1.5, 1.5), (0.5, 0.5)),
+        ((4.0, 4.0), (0.5, 0.5)),   # dominated region
+        ((0.5, 0.5), (0.1, 0.9)),
+        ((2.5, 0.2), (1.0, 0.2)),
+    ])
+    def test_exact_matches_mc(self, mu, sd):
+        front = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+        ref = (5.0, 5.0)
+        exact = ehvi_2d(np.array([mu]), np.array([sd]) ** 2, front, ref)[0]
+        mc = _mc_ehvi(np.array(mu), np.array(sd), front, ref)
+        assert exact == pytest.approx(mc, rel=0.02, abs=2e-3)
+
+    def test_empty_front_equals_product_of_ramps(self):
+        ref = (2.0, 2.0)
+        mu, sd = np.array([[0.0, 0.0]]), np.array([[1.0, 1.0]])
+        exact = ehvi_2d(mu, sd ** 2, np.zeros((0, 2)), ref)[0]
+        g = lambda c: (c - 0) * stats.norm.cdf(c) + stats.norm.pdf(c)
+        assert exact == pytest.approx(g(2.0) * g(2.0), rel=1e-6)
+
+    def test_deep_dominated_candidate_is_zero(self):
+        front = np.array([[0.0, 0.0]])
+        val = ehvi_2d(np.array([[3.0, 3.0]]), np.full((1, 2), 1e-6),
+                      front, (5.0, 5.0))[0]
+        assert val < 1e-6
+
+
+class TestEI:
+    def test_matches_closed_form(self):
+        mu, var, best = np.array([0.0]), np.array([1.0]), 1.0
+        z = (best - mu) / np.sqrt(var)
+        want = (best - mu) * stats.norm.cdf(z) + np.sqrt(var) * stats.norm.pdf(z)
+        assert expected_improvement(mu, var, best)[0] == pytest.approx(
+            want[0])
+
+    def test_prob_feasible(self):
+        assert prob_feasible(np.array([0.0]), np.array([1.0]), 0.0)[0] == \
+            pytest.approx(0.5)
+        assert prob_feasible(np.array([0.0]), np.array([1e-9]), 10.0)[0] == \
+            pytest.approx(1.0)
+
+
+class TestBatchSelection:
+    def test_greedy_batch_diverse_and_feasible(self, rng):
+        cand = rng.uniform(0, 1, (64, 3))
+
+        def post_obj(x):
+            mu = np.stack([x[:, 0], 1.0 - x[:, 0]], 1)
+            return mu, np.full_like(mu, 0.05)
+
+        def post_rec(x):
+            # configs with x2 > 0.5 predicted to violate RC
+            return np.where(x[:, 2] > 0.5, 500.0, 60.0), np.full(len(x), 1.0)
+
+        front = np.array([[0.5, 0.5]])
+        picked = select_profiling_batch(cand, post_obj, post_rec, front,
+                                        (2.0, 2.0), q=4,
+                                        recovery_constraint=180.0)
+        assert 0 < len(picked) <= 4
+        assert len(set(picked)) == len(picked)
+        # all picked should be predicted-feasible
+        assert all(cand[i, 2] <= 0.5 for i in picked)
+
+    def test_exclusions_respected(self, rng):
+        cand = rng.uniform(0, 1, (16, 2))
+        post = lambda x: (np.stack([x[:, 0], x[:, 1]], 1),
+                          np.full((len(x), 2), 0.1))
+        picked = select_profiling_batch(
+            cand, post, None, np.array([[0.9, 0.9]]), (1.5, 1.5), q=3,
+            exclude=list(range(8)))
+        assert all(i >= 8 for i in picked)

@@ -1,0 +1,161 @@
+"""Unit tests for the Demeter modeling stack (GP, ARIMA, RGPE, latency)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GP, LatencyConstraint, OnlineARIMA, RGPEnsemble,
+                        binned_forecast, build_rgpe)
+
+
+class TestGP:
+    def test_fit_recovers_smooth_function(self, rng):
+        x = rng.uniform(0, 1, (40, 2))
+        y = np.sin(3 * x[:, 0]) + x[:, 1] ** 2
+        gp = GP.fit(x, y)
+        xq = rng.uniform(0.05, 0.95, (100, 2))
+        mu, var = gp.posterior(xq)
+        true = np.sin(3 * xq[:, 0]) + xq[:, 1] ** 2
+        assert np.sqrt(np.mean((mu - true) ** 2)) < 0.1
+        assert np.all(var > 0)
+
+    def test_posterior_interpolates_training_points(self, rng):
+        x = rng.uniform(0, 1, (20, 3))
+        y = rng.normal(0, 1, 20)
+        gp = GP.fit(x, y)
+        mu, var = gp.posterior(x)
+        # noise is learned, so interpolation is approximate but tight
+        assert np.abs(mu - y).max() < 0.5
+        # posterior variance at data < prior variance away from data
+        far = np.full((1, 3), 2.0)
+        _, var_far = gp.posterior(far)
+        assert var.mean() < var_far[0]
+
+    def test_train_targets_roundtrip(self, rng):
+        x = rng.uniform(0, 1, (15, 2))
+        y = rng.normal(3.0, 2.0, 15)
+        gp = GP.fit(x, y)
+        np.testing.assert_allclose(gp.train_targets, y, atol=1e-2)
+
+    def test_loo_samples_shape_and_finite(self, rng):
+        x = rng.uniform(0, 1, (12, 2))
+        y = rng.normal(0, 1, 12)
+        gp = GP.fit(x, y)
+        s = gp.loo_samples(32, rng)
+        assert s.shape == (32, 12)
+        assert np.isfinite(s).all()
+
+
+class TestOnlineARIMA:
+    def test_tracks_linear_trend(self):
+        m = OnlineARIMA(p=4, d=1)
+        for t in range(300):
+            m.update(10.0 + 2.0 * t)
+        fc = m.forecast(10)
+        expected = 10.0 + 2.0 * (300 + np.arange(10))
+        np.testing.assert_allclose(fc, expected, rtol=0.02)
+
+    def test_tracks_seasonal_signal(self):
+        m = OnlineARIMA(p=12, d=1)
+        t = np.arange(800)
+        sig = 100 + 20 * np.sin(2 * np.pi * t / 40)
+        for v in sig:
+            m.update(v)
+        fc = m.forecast(40)
+        true = 100 + 20 * np.sin(2 * np.pi * (800 + np.arange(40)) / 40)
+        assert np.mean(np.abs(fc - true)) < 2.0
+
+    def test_binned_forecast_picks_max_bin(self):
+        m = OnlineARIMA(p=4, d=1)
+        for t in range(200):
+            m.update(100.0 + 5.0 * t)   # rising -> furthest bin largest
+        pred = binned_forecast(m, horizon=20, bins=4)
+        fc = m.forecast(20)
+        assert pred == pytest.approx(max(np.array_split(fc, 4)[i].mean()
+                                         for i in range(4)))
+        assert pred > m.last()
+
+    def test_prewarmup_is_flat(self):
+        m = OnlineARIMA(p=8, d=1)
+        m.update(50.0)
+        np.testing.assert_allclose(m.forecast(5), 50.0)
+
+
+class TestRGPE:
+    def test_informative_base_model_gets_weight(self, rng):
+        # Base task == target task (shifted): ranking is shift-invariant,
+        # so the base model should carry substantial weight.
+        f = lambda x: np.sin(3 * x[:, 0]) + x[:, 1]
+        bx = rng.uniform(0, 1, (40, 2))
+        base = GP.fit(bx, f(bx))
+        tx = rng.uniform(0, 1, (6, 2))
+        ty = f(tx) + 5.0
+        target = GP.fit(tx, ty)
+        ens = build_rgpe(target, tx, ty, [base])
+        assert ens.weights[0] > 0.3
+
+    def test_uninformative_base_model_diluted(self, rng):
+        f = lambda x: np.sin(3 * x[:, 0])
+        bx = rng.uniform(0, 1, (40, 2))
+        base = GP.fit(bx, rng.normal(0, 1, 40))     # pure noise task
+        tx = rng.uniform(0, 1, (10, 2))
+        ty = f(tx)
+        target = GP.fit(tx, ty)
+        ens = build_rgpe(target, tx, ty, [base])
+        assert ens.weights[-1] > ens.weights[0]
+
+    def test_cold_start_uniform(self, rng):
+        bx = rng.uniform(0, 1, (20, 2))
+        base = GP.fit(bx, rng.normal(0, 1, 20))
+        ens = build_rgpe(None, np.zeros((0, 2)), np.zeros(0), [base])
+        assert ens.n_members == 1
+        mu, var = ens.posterior(rng.uniform(0, 1, (5, 2)))
+        assert np.isfinite(mu).all() and (var > 0).all()
+
+    def test_no_models_returns_none(self):
+        assert build_rgpe(None, np.zeros((0, 2)), np.zeros(0), []) is None
+
+    def test_paper_variance_combination(self, rng):
+        x = rng.uniform(0, 1, (10, 2))
+        y = rng.normal(0, 1, 10)
+        g1, g2 = GP.fit(x, y, seed=0), GP.fit(x, y, seed=1)
+        ens = RGPEnsemble([g1, g2], np.array([0.5, 0.5]))
+        xq = rng.uniform(0, 1, (4, 2))
+        mu, var = ens.posterior(xq)
+        m1, v1 = g1.posterior(xq)
+        m2, v2 = g2.posterior(xq)
+        np.testing.assert_allclose(mu, 0.5 * m1 + 0.5 * m2, rtol=1e-6)
+        np.testing.assert_allclose(var, 0.25 * v1 + 0.25 * v2, rtol=1e-6)
+
+
+class TestLatencyConstraint:
+    def test_boundary_is_twice_p1(self):
+        lc = LatencyConstraint()
+        for v in np.linspace(1.0, 1.1, 50):
+            lc.observe(v)
+        assert lc.constraint() == pytest.approx(2 * np.percentile(
+            np.linspace(1.0, 1.1, 50), 1.0))
+        assert lc.is_normal(1.5)
+        assert not lc.is_normal(3.0)
+
+    def test_transform_range(self):
+        lc = LatencyConstraint()
+        for v in np.linspace(1.0, 2.0, 100):
+            lc.observe(v)
+        ts = [lc.transform(v) for v in (1.0, 2.0, 5.0, 100.0)]
+        assert all(0.0 <= t < 1.0 for t in ts)
+        assert ts == sorted(ts)            # monotone
+
+    def test_prewarmup_permissive(self):
+        lc = LatencyConstraint()
+        assert lc.constraint() is None
+        assert lc.is_normal(1e9)
+
+
+@given(st.lists(st.floats(0.1, 1e4), min_size=8, max_size=64))
+@settings(max_examples=25, deadline=None)
+def test_latency_transform_always_bounded(values):
+    lc = LatencyConstraint()
+    for v in values:
+        lc.observe(v)
+    for v in values:
+        assert 0.0 <= lc.transform(v) <= 1.0

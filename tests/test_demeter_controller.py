@@ -1,0 +1,112 @@
+"""Controller behaviour tests (paper §2.3/§2.4 semantics) over the DSP sim."""
+import numpy as np
+import pytest
+
+from repro.core import (USAGE, LATENCY, RECOVERY, DemeterController,
+                        DemeterHyperParams, paper_flink_space)
+from repro.dsp import ClusterModel, DSPExecutor, JobConfig, constant
+from repro.dsp.runner import run_experiment
+from repro.dsp.workloads import ysb_like
+
+
+def make_controller(rate=40_000.0, seed=0):
+    execu = DSPExecutor(ClusterModel(), JobConfig(), seed=seed)
+    hp = DemeterHyperParams(profile_parallelism=2)
+    ctl = DemeterController(paper_flink_space(), execu, hp=hp)
+    return ctl, execu
+
+
+class TestProfiling:
+    def test_cold_start_profiles_spread(self):
+        ctl, execu = make_controller()
+        for _ in range(60):
+            execu.step(40_000.0)
+            ctl.ingest(execu.observe())
+        ran = ctl.profiling_step()
+        assert len(ran) >= 1
+        seg = ctl.store.peek(ctl.predicted_rate())
+        assert seg is not None and len(seg) == len(ran)
+        for obs in seg.observations:
+            assert {USAGE, LATENCY, RECOVERY} <= set(obs.metrics)
+
+    def test_annealing_reduces_q(self):
+        ctl, execu = make_controller()
+        for _ in range(60):
+            execu.step(40_000.0)
+            ctl.ingest(execu.observe())
+        sizes = [len(ctl.profiling_step()) for _ in range(5)]
+        assert sizes[0] >= sizes[-1]
+
+    def test_profile_cost_accounted(self):
+        ctl, execu = make_controller()
+        for _ in range(60):
+            execu.step(40_000.0)
+            ctl.ingest(execu.observe())
+        ctl.profiling_step()
+        assert execu.profile_cost.cpu_s > 0
+        assert execu.profile_cost.mem_mb_s > 0
+
+
+class TestOptimization:
+    def test_reverts_to_cmax_on_latency_violation(self):
+        ctl, execu = make_controller()
+        # establish a healthy latency history, then underprovision
+        for _ in range(120):
+            execu.step(30_000.0)
+            ctl.ingest(execu.observe())
+        execu.reconfigure(JobConfig(workers=4).to_dict())
+        for _ in range(120):
+            execu.step(60_000.0)
+            obs = execu.observe()
+            ctl.ingest(obs)
+        new = ctl.optimization_step()
+        assert new == execu.cmax_config()
+        # the failing config was flagged for the domain-knowledge bias
+        assert any(o.reverted for s in ctl.store.segments.values()
+                   for o in s.observations)
+
+    def test_no_change_when_insufficient_data(self):
+        ctl, execu = make_controller()
+        for _ in range(60):
+            execu.step(35_000.0)
+            ctl.ingest(execu.observe())
+        out = ctl.optimization_step()   # at C_max already, nothing learned
+        assert out is None
+        assert execu.current_config() == execu.cmax_config()
+
+    def test_downscales_after_learning(self):
+        ctl, execu = make_controller()
+        rate = 35_000.0
+        for _ in range(120):
+            execu.step(rate)
+            ctl.ingest(execu.observe())
+        for _ in range(4):           # gather observations in this segment
+            ctl.profiling_step()
+        new = ctl.optimization_step()
+        assert new is not None, "controller should find a cheaper config"
+        assert execu.allocated_cost(new) < execu.allocated_cost(
+            execu.cmax_config())
+        # safety margin: chosen capacity still covers the workload
+        cap = execu.model.capacity(JobConfig.from_dict(new))
+        assert cap > rate
+
+    def test_efficiency_threshold_blocks_tiny_gains(self):
+        ctl, execu = make_controller()
+        ctl.hp = DemeterHyperParams(efficiency_threshold=1.0)  # 100 % gate
+        for _ in range(120):
+            execu.step(35_000.0)
+            ctl.ingest(execu.observe())
+        for _ in range(3):
+            ctl.profiling_step()
+        assert ctl.optimization_step() is None   # nothing saves 100 %
+
+
+@pytest.mark.slow
+def test_short_experiment_end_to_end():
+    tr = ysb_like(duration_s=2 * 3600, dt_s=10.0)
+    res = run_experiment(tr, "demeter", seed=1)
+    assert res.frac_latency_below(2.0) > 0.85
+    # ground-truth recovery in the static band (or NR from overlap)
+    done = [r for r in res.recovery_times() if r is not None
+            and np.isfinite(r)]
+    assert all(r < 360 for r in done)

@@ -1,0 +1,158 @@
+"""DSP substrate tests: simulator physics, workloads, baselines, anomaly."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RecoveryTracker
+from repro.dsp import (ClusterModel, DS2Controller, JobConfig,
+                       ReactiveController, SimJob, baseline_config, constant,
+                       measure_recovery, tsw_like, ysb_like)
+
+MODEL = ClusterModel()
+
+
+class TestCapacitySurface:
+    @given(w=st.integers(4, 24), c=st.integers(1, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_monotone_in_workers_and_cores(self, w, c):
+        base = MODEL.capacity(JobConfig(workers=w, cpu_cores=c))
+        if w < 24:
+            assert MODEL.capacity(JobConfig(workers=w + 1, cpu_cores=c)) \
+                >= base
+        assert MODEL.capacity(JobConfig(workers=w, cpu_cores=min(c + 1, 3))) \
+            >= base
+
+    def test_memory_has_diminishing_returns(self):
+        caps = [MODEL.capacity(JobConfig(memory_mb=m))
+                for m in (1024, 2048, 4096)]
+        assert caps[0] < caps[1] < caps[2]
+        assert caps[1] - caps[0] > caps[2] - caps[1]
+
+    def test_short_checkpoint_interval_taxes_throughput(self):
+        slow = MODEL.capacity(JobConfig(checkpoint_interval_s=10))
+        fast = MODEL.capacity(JobConfig(checkpoint_interval_s=90))
+        assert fast > slow
+
+    def test_parallelism_cap(self):
+        a = MODEL.capacity(JobConfig(workers=24, task_slots=2))
+        b = MODEL.capacity(JobConfig(workers=12, task_slots=2))
+        # both have 24 effective slots; 24 workers were capped
+        assert a == pytest.approx(b * 2, rel=0.5)
+
+    def test_static_cmax_covers_paper_range(self):
+        # the paper's workloads peak at ~80K ev/s; C_max must hold them
+        assert MODEL.capacity(JobConfig()) > 82_000 / 0.75
+
+
+class TestSimJob:
+    def test_underprovision_builds_lag(self):
+        job = SimJob(MODEL, JobConfig(workers=4), seed=0)
+        for _ in range(100):
+            m = job.step(50_000, 5.0)
+        assert m["consumer_lag"] > 1e5
+        assert m["latency"] > 10.0
+
+    def test_overprovision_keeps_low_latency(self):
+        job = SimJob(MODEL, JobConfig(), seed=0)
+        lats = [job.step(30_000, 5.0)["latency"] for _ in range(100)]
+        assert np.mean(lats[10:]) < 1.5
+
+    def test_recovery_time_reasonable_at_cmax(self):
+        job = SimJob(MODEL, JobConfig(), seed=0)
+        for _ in range(50):
+            job.step(50_000, 5.0)
+        r = measure_recovery(job, lambda t: 50_000, 0.0, 5.0)
+        assert r is not None and 60.0 <= r <= 180.0
+
+    def test_reconfigure_causes_downtime(self):
+        job = SimJob(MODEL, JobConfig(), seed=0)
+        job.step(30_000, 5.0)
+        job.reconfigure(JobConfig(workers=12))
+        m = job.step(30_000, 5.0)
+        assert m["down"] == 1.0
+
+    @given(rate=st.floats(20_000, 80_000))
+    @settings(max_examples=20, deadline=None)
+    def test_lag_never_negative(self, rate):
+        job = SimJob(MODEL, JobConfig(workers=8), seed=1)
+        for _ in range(50):
+            m = job.step(rate, 5.0)
+            assert m["consumer_lag"] >= 0.0
+
+
+class TestWorkloads:
+    def test_ysb_range_and_variability(self):
+        tr = ysb_like(duration_s=4 * 3600, dt_s=5.0)
+        assert tr.rates.min() >= 24_000 and tr.rates.max() <= 82_000
+        assert tr.rates.std() > 3_000          # high variability
+
+    def test_tsw_seasonal_and_trend(self):
+        tr = tsw_like(duration_s=18 * 3600, dt_s=10.0)
+        n = len(tr.rates)
+        # weak upward trend: second half mean > first half mean
+        assert tr.rates[n // 2:].mean() > tr.rates[:n // 2].mean()
+        # seasonality: three repetitions -> autocorrelation at period
+        period = n // 3
+        a = tr.rates[:-period] - tr.rates[:-period].mean()
+        b = tr.rates[period:] - tr.rates[period:].mean()
+        rho = (a * b).sum() / np.sqrt((a * a).sum() * (b * b).sum())
+        assert rho > 0.5
+
+    def test_rate_at_clamps(self):
+        tr = constant(1000.0, duration_s=100.0, dt_s=5.0)
+        assert tr.rate_at(-5) == 1000.0
+        assert tr.rate_at(1e9) == 1000.0
+
+
+class TestBaselines:
+    def _window(self, util, thr=30_000.0, rate=40_000.0):
+        return [{"utilization": util, "usage_cpu": 10.0, "throughput": thr,
+                 "rate": rate}] * 12
+
+    def test_reactive_scales_up_immediately(self):
+        r = ReactiveController()
+        new = r.decide(100.0, self._window(0.9), baseline_config(8))
+        assert new is not None and new.workers > 8
+
+    def test_reactive_downscale_needs_stabilization(self):
+        r = ReactiveController()
+        cur = baseline_config(20)
+        assert r.decide(100.0, self._window(0.1), cur) is None
+        assert r.decide(200.0, self._window(0.1), cur) is None
+        new = r.decide(500.0, self._window(0.1), cur)
+        assert new is not None and new.workers < 20
+
+    def test_ds2_within_boundary_no_change(self):
+        d = DS2Controller()
+        assert d.decide(500.0, self._window(0.35), baseline_config(10)) is None
+
+    def test_ds2_pauses_after_scaling(self):
+        d = DS2Controller()
+        new = d.decide(500.0, self._window(0.9), baseline_config(8))
+        assert new is not None
+        # blind during restart+catchup pause
+        assert d.decide(600.0, self._window(0.9), new) is None
+
+
+class TestRecoveryTracker:
+    def test_detects_outage_span(self):
+        tr = RecoveryTracker()
+        rng = np.random.default_rng(0)
+        t = 0.0
+        for _ in range(60):     # healthy warmup
+            t += 5.0
+            tr.observe(t, {"throughput": 50_000 + rng.normal(0, 200),
+                           "consumer_lag": 1_000 + rng.normal(0, 50)})
+        assert not tr.in_anomaly
+        start = t
+        for _ in range(20):     # outage: throughput collapses, lag explodes
+            t += 5.0
+            tr.observe(t, {"throughput": 0.0,
+                           "consumer_lag": 50_000 * (t - start)})
+        assert tr.in_anomaly
+        for _ in range(40):     # recovered
+            t += 5.0
+            tr.observe(t, {"throughput": 50_000 + rng.normal(0, 200),
+                           "consumer_lag": 1_000 + rng.normal(0, 50)})
+        assert tr.last_recovery_s is not None
+        assert 80.0 <= tr.last_recovery_s <= 220.0

@@ -1,0 +1,106 @@
+"""Serving engine tests: continuous batching correctness + manager props."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving import (KVCacheManager, Request, ServingCluster,
+                           ServingEngine)
+from repro.serving.autoscale import ClusterModelParams, ReplicaProfile
+
+
+class TestKVCacheManager:
+    def test_allocate_release_cycle(self):
+        m = KVCacheManager(n_slots=2, max_len=64)
+        a = m.allocate("a", 10, 5)
+        b = m.allocate("b", 10, 5)
+        assert {a, b} == {0, 1}
+        assert m.allocate("c", 10, 5) is None
+        m.release(a)
+        assert m.allocate("c", 10, 5) == a
+
+    def test_rejects_oversized(self):
+        m = KVCacheManager(n_slots=1, max_len=16)
+        with pytest.raises(ValueError):
+            m.allocate("x", 10, 10)
+
+    @given(st.lists(st.tuples(st.integers(1, 20), st.integers(1, 10)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=30, deadline=None)
+    def test_occupancy_invariants(self, reqs):
+        m = KVCacheManager(n_slots=4, max_len=64)
+        for i, (plen, mtok) in enumerate(reqs):
+            m.allocate(f"r{i}", plen, mtok)
+            assert 0.0 <= m.occupancy() <= 1.0
+            assert len(m.active()) <= 4
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "mamba2_1p3b",
+                                  "deepseek_v2_lite_16b"])
+def test_continuous_batching_matches_sequential(arch):
+    """Ragged engine decoding == one-request-at-a-time decoding."""
+    cfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, n_slots=3, max_len=96)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n))
+               for n in (8, 12, 16, 9, 11)]
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(f"r{i}", pr, max_tokens=6, arrival_s=0.0))
+    for _ in range(40):
+        eng.admit()
+        if eng.step() == 0 and not eng.queue:
+            break
+    assert eng.metrics.completed == len(prompts)
+
+    for i, pr in enumerate(prompts):
+        cache = init_cache(cfg, 1, 96, dtype=jnp.float32)
+        lg, cache = prefill(params, cfg,
+                            {"tokens": jnp.asarray(pr, jnp.int32)[None]},
+                            cache)
+        toks = [int(jnp.argmax(lg[0]))]
+        for _ in range(5):
+            lg, cache = decode_step(
+                params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+            toks.append(int(jnp.argmax(lg[0])))
+        assert toks == eng.requests[f"r{i}"].output, f"{arch} req {i}"
+
+
+class TestServingCluster:
+    PROFILE = ReplicaProfile(decode_step_s=0.02, prefill_s=0.05,
+                             base_slots=8)
+
+    def test_capacity_monotone_in_replicas(self):
+        c = ServingCluster(self.PROFILE, ClusterModelParams())
+        caps = [c.capacity_rps({**c.config, "replicas": r})
+                for r in (2, 4, 8)]
+        assert caps[0] < caps[1] < caps[2]
+
+    def test_tp_speeds_up_decode(self):
+        c = ServingCluster(self.PROFILE, ClusterModelParams())
+        a = c.capacity_rps({**c.config, "tp_degree": 1})
+        b = c.capacity_rps({**c.config, "tp_degree": 8})
+        assert b > a
+
+    def test_failure_and_catchup(self):
+        c = ServingCluster(self.PROFILE, ClusterModelParams())
+        for _ in range(20):
+            c.step(5.0, 5.0)
+        c.inject_failure()
+        assert c.downtime_left_s > 0
+        for _ in range(200):
+            c.step(5.0, 5.0)
+            if c.caught_up:
+                break
+        assert c.caught_up
+
+    def test_overload_backlogs(self):
+        c = ServingCluster(self.PROFILE, ClusterModelParams())
+        cap = c.capacity_rps()
+        for _ in range(50):
+            m = c.step(cap * 2.0, 5.0)
+        assert m["consumer_lag"] > 0
+        assert m["latency"] > self.PROFILE.prefill_s

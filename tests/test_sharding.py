@@ -1,0 +1,144 @@
+"""Sharding rule tests: spec structure, sanitization, launch spec coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.distributed.sharding import (param_specs, sanitize_spec, shard,
+                                        sharding_context)
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import (SHAPES, batch_specs, cell_supported,
+                                input_specs)
+from repro.models import init_params
+
+
+def tiny_mesh():
+    # 1 real device: a (1, 1) mesh exercises all the code paths.
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_specs_tree_matches_params(self, arch):
+        cfg = smoke_config(arch)
+        params = jax.eval_shape(
+            lambda k: init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = param_specs(params)
+        # identical tree structure
+        assert jax.tree.structure(specs) == jax.tree.structure(params)
+        # every spec rank <= leaf rank
+        for s, l in zip(jax.tree.leaves(specs), jax.tree.leaves(params)):
+            assert len(s) <= l.ndim
+
+    def test_core_rules(self):
+        cfg = smoke_config("deepseek_7b")
+        params = jax.eval_shape(
+            lambda k: init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = param_specs(params)
+        # stacked attention: (L, d, H*hd) -> (None, data, model)
+        assert specs["stack"]["mixer"]["wq"]["w"] == P(None, "data", "model")
+        assert specs["stack"]["mixer"]["wo"]["w"] == P(None, "model", "data")
+        assert specs["stack"]["ffn"]["down"]["w"] == P(None, "model", "data")
+        assert specs["embed"]["table"] == P("model", None)
+        assert specs["final_norm"]["scale"] == P(None)
+
+    def test_moe_expert_rules(self):
+        cfg = smoke_config("deepseek_moe_16b")
+        params = jax.eval_shape(
+            lambda k: init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = param_specs(params)
+        assert specs["stack"]["ffn"]["experts"]["gate"]["w"] \
+            == P(None, "model", "data", None)
+        assert specs["stack"]["ffn"]["experts"]["down"]["w"] \
+            == P(None, "model", None, "data")
+
+
+class TestSanitize:
+    def test_drops_non_dividing_axes(self):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        # 1 divides everything on a (1,1) mesh
+        assert sanitize_spec(mesh, P("data", "model"), (7, 5)) \
+            == P("data", "model")
+
+    def test_drops_on_bigger_virtual_mesh(self):
+        import jax.sharding as shd
+        devs = np.array(jax.devices()[:1] * 16).reshape(4, 4) \
+            if jax.device_count() >= 16 else None
+        # portable check via the pure function with a fake mesh-like object
+        class FakeMesh:
+            shape = {"data": 4, "model": 4}
+        assert sanitize_spec(FakeMesh(), P("data", "model"), (8, 6)) \
+            == P("data", None)
+        assert sanitize_spec(FakeMesh(), P(("data", "model"),), (15,)) \
+            == P(None)
+        assert sanitize_spec(FakeMesh(), P(("data", "model"),), (16,)) \
+            == P(("data", "model"))
+
+
+class TestShardHook:
+    def test_noop_without_context(self):
+        x = jnp.ones((4, 4))
+        y = shard(x, "batch", "mlp")
+        assert y is x
+
+    def test_right_alignment_in_context(self):
+        mesh = tiny_mesh()
+        with sharding_context(mesh):
+            x = jnp.ones((2, 3, 4))
+            y = shard(x, "batch", "mlp")   # shorter spec: pads left
+            assert y.shape == x.shape
+            z = shard(jnp.ones((4,)), "batch", None, "mlp")  # longer: trims
+            assert z.shape == (4,)
+
+
+class TestLaunchSpecs:
+    def test_cell_rules(self):
+        from repro.configs import get_config
+        hub = get_config("hubert_xlarge")
+        assert not cell_supported(hub, "decode_32k")[0]
+        assert not cell_supported(hub, "long_500k")[0]
+        assert cell_supported(hub, "prefill_32k")[0]
+        nemo = get_config("mistral_nemo_12b")
+        assert not cell_supported(nemo, "long_500k")[0]
+        mamba = get_config("mamba2_1p3b")
+        assert cell_supported(mamba, "long_500k")[0]
+
+    def test_assigned_shape_table(self):
+        assert SHAPES["train_4k"] == (4096, 256)
+        assert SHAPES["prefill_32k"] == (32768, 32)
+        assert SHAPES["decode_32k"] == (32768, 128)
+        assert SHAPES["long_500k"] == (524288, 1)
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_batch_specs_no_allocation(self, arch):
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        b = batch_specs(cfg, 256, 4096, training=True)
+        for leaf in jax.tree.leaves(b):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        if cfg.frontend and cfg.frontend.kind == "audio":
+            assert b["frames"].shape == (256, 4096, cfg.frontend.d_in)
+        else:
+            assert b["tokens"].shape == (256, 4096)
+
+
+class TestCollectiveParser:
+    def test_counts_result_bytes(self):
+        hlo = """
+          %ag = bf16[16,128] all-gather(%x), replica_groups={}
+          %ar.1 = f32[64] all-reduce(%y), to_apply=%add
+          %t = (f32[8,8], f32[8,8]) all-to-all(%a, %b)
+          %cp = u8[32] collective-permute(%z)
+          %not_a_coll = f32[4] add(%p, %q)
+        """
+        got = collective_bytes(hlo)
+        assert got["all-gather"] == 16 * 128 * 2
+        assert got["all-reduce"] == 64 * 4
+        assert got["all-to-all"] == 2 * 64 * 4
+        assert got["collective-permute"] == 32

@@ -1,0 +1,60 @@
+"""End-to-end behaviour tests mirroring the paper's claims (§3.5).
+
+These run shortened versions of the paper's experiments on the DSP
+simulation and assert the *qualitative* results Demeter's evaluation
+establishes: near-static latencies and recoveries, fewest reconfigurations,
+and resource savings developing over time.
+"""
+import numpy as np
+import pytest
+
+from repro.dsp import run_experiment, ysb_like
+
+DURATION = 2 * 3600.0   # shortened experiment; the benchmark runs 18 h
+
+
+@pytest.fixture(scope="module")
+def runs():
+    tr = ysb_like(duration_s=DURATION, dt_s=10.0)
+    return {m: run_experiment(tr, m, seed=3)
+            for m in ("static", "demeter", "reactive", "ds2")}
+
+
+def test_static_sets_the_latency_bar(runs):
+    assert runs["static"].frac_latency_below(2.0) > 0.9
+
+
+def test_demeter_latencies_near_static(runs):
+    # paper: Demeter holds >= 95 % of latencies in the optimal band; on the
+    # shortened run we allow a small gap to the static bar.
+    assert runs["demeter"].frac_latency_below(2.0) >= \
+        runs["static"].frac_latency_below(2.0) - 0.1
+
+
+def test_demeter_fewest_reconfigurations(runs):
+    # paper Table 3: Demeter had the least reconfigurations (Delta).
+    assert runs["demeter"].n_reconfigurations <= \
+        runs["reactive"].n_reconfigurations
+
+
+def test_recoveries_measured_for_all_failures(runs):
+    for m, r in runs.items():
+        assert len(r.failures) == int(DURATION // (45 * 60))
+    static_rec = [x for x in runs["static"].recovery_times()
+                  if x is not None and np.isfinite(x)]
+    assert static_rec and max(static_rec) < 180.0
+
+
+def test_demeter_recovery_near_static(runs):
+    sr = [x for x in runs["static"].recovery_times()
+          if x is not None and np.isfinite(x)]
+    dr = [x for x in runs["demeter"].recovery_times()
+          if x is not None and np.isfinite(x)]
+    if sr and dr:   # NR entries can empty a short run
+        assert np.mean(dr) <= np.mean(sr) * 1.6
+
+
+def test_profiling_cost_only_for_demeter(runs):
+    assert runs["demeter"].profile_cpu_s > 0
+    for m in ("static", "reactive", "ds2"):
+        assert runs[m].profile_cpu_s == 0.0
