@@ -1,11 +1,19 @@
-"""Paper-table benchmarks: the YSB/TSW experiments (Fig. 5/6, Table 3).
+"""Paper-table benchmarks + the multi-scenario sweep CLI.
 
-Runs (trace x method) cells of the paper's evaluation on the DSP simulation
-and derives every reported artifact. Results are cached as .npz under
-``results/dsp_runs`` so the per-figure benches share runs.
+Two entry points:
+
+* ``python benchmarks/dsp_experiments.py paper`` — the paper's (trace x
+  method) cells (Fig. 5/6, Table 3) through the scalar protocol harness,
+  cached as pickles under ``results/dsp_runs``.
+* ``python benchmarks/dsp_experiments.py sweep`` — a ScenarioSpec grid
+  (trace class x controller x seed) through the batched sweep engine, with
+  per-scenario JSON results and an optional batched-vs-scalar verification +
+  wall-clock speedup report (``--compare-scalar``).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import pickle
 import time
@@ -13,10 +21,13 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.dsp import RunResult, run_experiment, tsw_like, ysb_like
+from repro.dsp import (PeriodicFailures, RunResult, run_experiment, run_sweep,
+                       scenario_grid, make_trace, tsw_like, ysb_like,
+                       TRACE_GENERATORS)
 
 METHODS = ("static", "demeter", "reactive", "ds2")
 CACHE_DIR = "results/dsp_runs"
+SWEEP_DIR = "results/sweeps"
 
 
 def get_runs(duration_h: float = 3.0, dt_s: float = 10.0, seed: int = 0,
@@ -113,3 +124,96 @@ def usage_trend(runs) -> Dict[str, Dict[str, float]]:
         slope = np.polyfit(t[mask], u[mask], 1)[0]
         out[tname] = {"cpu_slope_per_h": float(slope / max(u.mean(), 1e-9))}
     return out
+
+
+# -- sweep CLI ----------------------------------------------------------------
+def _csv(value: str) -> List[str]:
+    return [v.strip() for v in value.split(",") if v.strip()]
+
+
+def sweep_main(args: argparse.Namespace) -> None:
+    duration_s = args.duration_h * 3600.0
+    traces = [make_trace(k, duration_s=duration_s, dt_s=args.dt)
+              for k in args.traces]
+    failures = PeriodicFailures(args.failure_interval_m * 60.0)
+    specs = scenario_grid(traces, args.controllers, args.seeds,
+                          failures=failures)
+    print(f"# sweep: {len(specs)} scenarios "
+          f"({len(traces)} traces x {len(args.controllers)} controllers "
+          f"x {len(args.seeds)} seeds), {args.duration_h:g}h @ dt={args.dt:g}s")
+
+    batched = run_sweep(specs, engine="batched")
+    print(f"# batched engine: {batched.wall_s:.2f}s wall "
+          f"({batched.n_steps} steps x {len(specs)} scenarios)")
+
+    if args.compare_scalar:
+        scalar = run_sweep(specs, engine="scalar")
+        mismatched = [a.name for a, b in
+                      zip(batched.scenarios, scalar.scenarios)
+                      if not a.allclose(b)]
+        print(f"# scalar reference: {scalar.wall_s:.2f}s wall -> "
+              f"speedup {scalar.wall_s / max(batched.wall_s, 1e-9):.2f}x")
+        print(f"# batched-vs-scalar equivalence: "
+              f"{'OK' if not mismatched else 'MISMATCH ' + str(mismatched)}")
+
+    os.makedirs(args.out, exist_ok=True)
+    for sc in batched.scenarios:
+        path = os.path.join(args.out,
+                            sc.name.replace("/", "_") + ".json")
+        with open(path, "w") as f:
+            json.dump(sc.summary(), f, indent=2)
+    with open(os.path.join(args.out, "sweep.json"), "w") as f:
+        json.dump(batched.to_json(), f, indent=2)
+    print(f"# wrote {len(batched.scenarios)} scenario JSONs to {args.out}")
+
+    hdr = f"{'scenario':32s} {'p50':>7s} {'p95':>7s} {'<2s':>6s} " \
+          f"{'cpu(core-s)':>12s} {'reconf':>6s} {'fails':>5s}"
+    print(hdr)
+    for sc in batched.scenarios:
+        s = sc.summary()
+        print(f"{s['name']:32s} {s['latency_p50_s']:7.2f} "
+              f"{s['latency_p95_s']:7.2f} {s['frac_latency_below_2s']:6.1%} "
+              f"{s['cumulative_cpu_core_s']:12.0f} "
+              f"{s['n_reconfigurations']:6d} {s['n_failures_injected']:5d}")
+
+
+def paper_main(args: argparse.Namespace) -> None:
+    runs = get_runs(duration_h=args.duration_h, dt_s=args.dt)
+    for line in table3(runs):
+        print(line)
+    print("latency<2s:", latency_optimal_fraction(runs))
+    print("usage vs static:", resource_usage_vs_static(runs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sw = sub.add_parser("sweep", help="batched multi-scenario sweep")
+    sw.add_argument("--traces", type=_csv,
+                    default=["diurnal", "flash", "regime"],
+                    help=f"trace classes ({','.join(sorted(TRACE_GENERATORS))})")
+    sw.add_argument("--controllers", type=_csv,
+                    default=["static", "reactive", "ds2"])
+    sw.add_argument("--seeds", type=lambda v: [int(x) for x in _csv(v)],
+                    default=[0, 1])
+    sw.add_argument("--duration-h", type=float, default=2.0)
+    sw.add_argument("--dt", type=float, default=5.0)
+    sw.add_argument("--failure-interval-m", type=float, default=45.0)
+    sw.add_argument("--out", default=SWEEP_DIR)
+    sw.add_argument("--compare-scalar", action="store_true",
+                    help="also run the scalar reference oracle; verify "
+                         "equivalence and report the wall-clock speedup")
+    sw.set_defaults(func=sweep_main)
+
+    pp = sub.add_parser("paper", help="paper-protocol cells (Table 3 etc.)")
+    pp.add_argument("--duration-h", type=float, default=3.0)
+    pp.add_argument("--dt", type=float, default=10.0)
+    pp.set_defaults(func=paper_main)
+
+    args = ap.parse_args()
+    args.func(args)
+
+
+if __name__ == "__main__":
+    main()

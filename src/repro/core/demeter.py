@@ -288,8 +288,16 @@ class DemeterController:
     # ------------------------------------------------------------------
     # process 2: optimizing (paper §2.4, Fig. 4)
     # ------------------------------------------------------------------
-    def optimization_step(self) -> Optional[Dict[str, float]]:
-        metrics = self.executor.observe()
+    def optimization_step(self, metrics: Optional[Mapping[str, float]] = None
+                          ) -> Optional[Dict[str, float]]:
+        """One optimizing-process iteration (paper §2.4, Fig. 4).
+
+        ``metrics`` lets a batched harness (the sweep engine) push telemetry
+        it already holds instead of the controller pulling via
+        ``executor.observe()`` — the only executor round-trip on this path.
+        """
+        if metrics is None:
+            metrics = self.executor.observe()
         current = self.executor.current_config()
         cmax = self.executor.cmax_config()
         lavg = metrics.get("latency", float("nan"))

@@ -1,16 +1,27 @@
-"""Paper-faithful DSP substrate: simulator, workloads, baselines, harness."""
+"""Paper-faithful DSP substrate: simulator, workloads, baselines, harness,
+plus the batched multi-scenario sweep engine."""
 from .baselines import (DS2Controller, ReactiveController, StaticController,
                         baseline_config)
 from .executor import DSPExecutor, ProfileCost
 from .runner import FailureRecord, RunResult, run_experiment
-from .simulator import (MAX_PARALLELISM, ClusterModel, JobConfig, SimJob,
-                        measure_recovery)
-from .workloads import Trace, constant, tsw_like, ysb_like
+from .simulator import (MAX_PARALLELISM, BatchState, ClusterModel, JobConfig,
+                        SimJob, measure_recovery)
+from .sweep import (ScenarioResult, ScenarioSpec, SweepEngine, SweepResult,
+                    paper_grid, run_sweep, scenario_grid)
+from .workloads import (TRACE_GENERATORS, FailureSchedule, FailuresAt,
+                        NoFailures, PeriodicFailures, Trace, constant,
+                        diurnal, flash_crowd, make_trace, regime_switching,
+                        sinusoid_drift, tsw_like, ysb_like)
 
 __all__ = [
-    "ClusterModel", "JobConfig", "SimJob", "MAX_PARALLELISM",
+    "ClusterModel", "JobConfig", "SimJob", "BatchState", "MAX_PARALLELISM",
     "measure_recovery", "Trace", "constant", "ysb_like", "tsw_like",
+    "diurnal", "flash_crowd", "regime_switching", "sinusoid_drift",
+    "make_trace", "TRACE_GENERATORS", "FailureSchedule", "NoFailures",
+    "PeriodicFailures", "FailuresAt",
     "DSPExecutor", "ProfileCost", "StaticController", "ReactiveController",
     "DS2Controller", "baseline_config", "run_experiment", "RunResult",
     "FailureRecord",
+    "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
+    "scenario_grid", "paper_grid", "run_sweep",
 ]

@@ -124,3 +124,17 @@ class DS2Controller:
             return None
         self._paused_until = t + self.restart_pause_s + self.catchup_pause_s
         return baseline_config(desired)
+
+def make_baseline(kind: str, cmax: Optional[JobConfig] = None):
+    """(controller, start_config) for a named baseline method.
+
+    Single source of the kind -> controller + start-config wiring so the
+    paper-protocol runner and the sweep engine cannot desynchronize."""
+    cmax = cmax if cmax is not None else JobConfig()
+    if kind == "static":
+        return StaticController(cmax), cmax
+    if kind == "reactive":
+        return ReactiveController(), baseline_config(12)  # HPA starts mid-range
+    if kind == "ds2":
+        return DS2Controller(), baseline_config(12)
+    raise ValueError(f"unknown method {kind!r}")

@@ -6,11 +6,16 @@ the predicted rate -> 2-minute stabilization -> 1-minute latency measurement
 detector over (throughput, consumer lag) until full catch-up or the 360 s
 timeout. Profiling resource-time is accounted so experiments can report
 Demeter's *net* savings like the paper does.
+
+The profiling lifecycle and the usage/cost normalizations are module-level
+functions so that both the scalar :class:`DSPExecutor` and the sweep
+engine's per-scenario executor views (``repro.dsp.sweep``) share one
+implementation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Callable, Dict, List, Mapping, Optional
 
 import numpy as np
 
@@ -28,6 +33,89 @@ RECOVERY_TIMEOUT_S = 360.0
 class ProfileCost:
     cpu_s: float = 0.0      # core-seconds consumed by profiling clones
     mem_mb_s: float = 0.0   # MB-seconds consumed by profiling clones
+
+    def add(self, m: Mapping[str, float], dt: float) -> None:
+        """Charge a profiling clone's *used* resources for one sim step."""
+        self.cpu_s += m["usage_cpu"] * dt
+        self.mem_mb_s += m["usage_mem_mb"] * dt
+
+
+def usage_norm(model: ClusterModel, cmax: JobConfig,
+               window: List[Dict[str, float]]) -> float:
+    """C_max-normalized 50/50 CPU+memory usage scalar over a metric window."""
+    cpu = np.mean([m["usage_cpu"] for m in window])
+    mem = np.mean([m["usage_mem_mb"] for m in window])
+    return float(0.5 * cpu / model.allocated_cpu(cmax)
+                 + 0.5 * mem / model.allocated_mem_mb(cmax))
+
+
+def allocated_cost(model: ClusterModel, cmax: JobConfig,
+                   config: Mapping[str, float]) -> float:
+    """Deterministic allocated-resource scalar, normalized against C_max."""
+    cfg = JobConfig.from_dict(config)
+    cpu = model.allocated_cpu(cfg) / model.allocated_cpu(cmax)
+    mem = model.allocated_mem_mb(cfg) / model.allocated_mem_mb(cmax)
+    return 0.5 * cpu + 0.5 * mem
+
+
+def observe_digest(model: ClusterModel, cmax: JobConfig,
+                   window: List[Dict[str, float]]) -> Dict[str, float]:
+    """The observation Demeter's optimizing process consumes: mean rate and
+    latency plus the C_max-normalized usage scalar over a metric window."""
+    if not window:
+        return {}
+    return {"rate": float(np.mean([m["rate"] for m in window])),
+            "latency": float(np.mean([m["latency"] for m in window])),
+            "usage": usage_norm(model, cmax, window)}
+
+
+def profile_one(model: ClusterModel, cmax: JobConfig, cfg: JobConfig,
+                rate: float, dt: float, seed: int,
+                account: Optional[Callable[[Dict[str, float]], None]] = None
+                ) -> Optional[Dict[str, float]]:
+    """Run one profiling clone through the paper's lifecycle.
+
+    Returns the USAGE / LATENCY / RECOVERY observation, or None for a failed
+    run. ``account`` is called with each step's metrics so callers can charge
+    the clone's resource-time."""
+    clone = SimJob(model, cfg, seed=seed)
+    tracker = RecoveryTracker()
+    t = 0.0
+    lat_samples: List[float] = []
+    usage_samples: List[Dict[str, float]] = []
+
+    while t < STABILIZATION_S + MEASURE_S:
+        t += dt
+        m = clone.step(rate, dt)
+        if account is not None:
+            account(m)
+        tracker.observe(t, {"throughput": m["throughput"],
+                            "consumer_lag": m["consumer_lag"]})
+        if t > STABILIZATION_S:
+            lat_samples.append(m["latency"])
+            usage_samples.append(m)
+
+    lavg = float(np.mean(lat_samples))
+    usage = usage_norm(model, cmax, usage_samples)
+
+    clone.inject_failure()
+    t_fail, recovered = t, None
+    while t - t_fail < RECOVERY_TIMEOUT_S:
+        t += dt
+        m = clone.step(rate, dt)
+        if account is not None:
+            account(m)
+        tracker.observe(t, {"throughput": m["throughput"],
+                            "consumer_lag": m["consumer_lag"]})
+        if tracker.last_recovery_s is not None and clone.caught_up:
+            recovered = t - t_fail
+            break
+    if not np.isfinite(lavg):
+        return None
+    # An un-recovered run still informs the models: pin R at the timeout.
+    recovery = tracker.last_recovery_s if recovered is not None \
+        else RECOVERY_TIMEOUT_S
+    return {USAGE: usage, LATENCY: lavg, RECOVERY: float(recovery)}
 
 
 @dataclass
@@ -68,74 +156,16 @@ class DSPExecutor:
         self.job.reconfigure(JobConfig.from_dict(config))
 
     def observe(self) -> Dict[str, float]:
-        w = self.window(60.0)
-        if not w:
-            return {}
-        lat = float(np.mean([m["latency"] for m in w]))
-        rate = float(np.mean([m["rate"] for m in w]))
-        return {"rate": rate, "latency": lat,
-                "usage": self._usage_norm(w)}
+        return observe_digest(self.model, self.cmax, self.window(60.0))
 
     def allocated_cost(self, config: Mapping[str, float]) -> float:
-        cfg = JobConfig.from_dict(config)
-        cpu = self.model.allocated_cpu(cfg) / self.model.allocated_cpu(self.cmax)
-        mem = (self.model.allocated_mem_mb(cfg)
-               / self.model.allocated_mem_mb(self.cmax))
-        return 0.5 * cpu + 0.5 * mem
-
-    def _usage_norm(self, window: List[Dict[str, float]]) -> float:
-        cpu = np.mean([m["usage_cpu"] for m in window])
-        mem = np.mean([m["usage_mem_mb"] for m in window])
-        return float(0.5 * cpu / self.model.allocated_cpu(self.cmax)
-                     + 0.5 * mem / self.model.allocated_mem_mb(self.cmax))
+        return allocated_cost(self.model, self.cmax, config)
 
     # -- profiling lifecycle ---------------------------------------------------
     def profile(self, configs: List[Dict[str, float]], rate: float
                 ) -> List[Optional[Dict[str, float]]]:
-        return [self._profile_one(JobConfig.from_dict(c), rate, i)
+        return [profile_one(self.model, self.cmax, JobConfig.from_dict(c),
+                            rate, self.dt,
+                            seed=self.seed * 1009 + i + int(rate),
+                            account=lambda m: self.profile_cost.add(m, self.dt))
                 for i, c in enumerate(configs)]
-
-    def _profile_one(self, cfg: JobConfig, rate: float, run_idx: int
-                     ) -> Optional[Dict[str, float]]:
-        clone = SimJob(self.model, cfg,
-                       seed=self.seed * 1009 + run_idx + int(rate))
-        tracker = RecoveryTracker()
-        t = 0.0
-        lat_samples: List[float] = []
-        usage_samples: List[Dict[str, float]] = []
-
-        while t < STABILIZATION_S + MEASURE_S:
-            t += self.dt
-            m = clone.step(rate, self.dt)
-            self._account(m)
-            tracker.observe(t, {"throughput": m["throughput"],
-                                "consumer_lag": m["consumer_lag"]})
-            if t > STABILIZATION_S:
-                lat_samples.append(m["latency"])
-                usage_samples.append(m)
-
-        lavg = float(np.mean(lat_samples))
-        usage = self._usage_norm(usage_samples)
-
-        clone.inject_failure()
-        t_fail, recovered = t, None
-        while t - t_fail < RECOVERY_TIMEOUT_S:
-            t += self.dt
-            m = clone.step(rate, self.dt)
-            self._account(m)
-            tracker.observe(t, {"throughput": m["throughput"],
-                                "consumer_lag": m["consumer_lag"]})
-            if tracker.last_recovery_s is not None and clone.caught_up:
-                recovered = t - t_fail
-                break
-        if not np.isfinite(lavg):
-            return None
-        # An un-recovered run still informs the models: pin R at the timeout.
-        recovery = tracker.last_recovery_s if recovered is not None \
-            else RECOVERY_TIMEOUT_S
-        return {USAGE: usage, LATENCY: lavg, RECOVERY: float(recovery)}
-
-    def _account(self, m: Dict[str, float]) -> None:
-        """Charge a profiling clone's *used* resources for one sim step."""
-        self.profile_cost.cpu_s += m["usage_cpu"] * self.dt
-        self.profile_cost.mem_mb_s += m["usage_mem_mb"] * self.dt

@@ -6,6 +6,10 @@ Collects everything Figures 5/6 and Table 3 report: latency distributions,
 per-failure recovery times (with NR for reconfiguration overlap and the
 6-minute cap), cumulative CPU/memory usage (profiling cost separately) and
 scale-out decisions over time.
+
+This is the scalar, one-cell-at-a-time protocol. For multi-scenario grids
+(trace class x controller x seed x failure schedule) executed as a single
+vectorized run, use :mod:`repro.dsp.sweep`.
 """
 from __future__ import annotations
 
@@ -16,11 +20,10 @@ import numpy as np
 
 from ..core.config_space import paper_flink_space
 from ..core.demeter import DemeterController, DemeterHyperParams
-from .baselines import (DS2Controller, ReactiveController, StaticController,
-                        baseline_config)
+from .baselines import make_baseline
 from .executor import DSPExecutor
 from .simulator import ClusterModel, JobConfig
-from .workloads import Trace
+from .workloads import FailureSchedule, PeriodicFailures, Trace
 
 FAILURE_INTERVAL_S = 45 * 60.0
 RECOVERY_CAP_S = 360.0           # "6m+" in Table 3
@@ -78,8 +81,13 @@ def run_experiment(trace: Trace, method: str, *,
                    model: Optional[ClusterModel] = None,
                    hp: Optional[DemeterHyperParams] = None,
                    seed: int = 0,
-                   duration_s: Optional[float] = None) -> RunResult:
-    """Run one (trace, method) cell of the paper's evaluation."""
+                   duration_s: Optional[float] = None,
+                   failures_schedule: Optional[FailureSchedule] = None
+                   ) -> RunResult:
+    """Run one (trace, method) cell of the paper's evaluation.
+
+    ``failures_schedule`` overrides the paper's 45-minute periodic injection
+    (see :mod:`repro.dsp.workloads` for the composable schedule API)."""
     model = model or ClusterModel()
     cmax = JobConfig()                     # paper §3.2 C_max
     execu = DSPExecutor(model, cmax, seed=seed, dt=trace.dt_s)
@@ -90,21 +98,16 @@ def run_experiment(trace: Trace, method: str, *,
     if method == "demeter":
         demeter = DemeterController(paper_flink_space(), execu,
                                     hp=hp or DemeterHyperParams())
-    elif method == "static":
-        baseline = StaticController(cmax)
-    elif method == "reactive":
-        baseline = ReactiveController()
-        execu.reconfigure(baseline_config(12).to_dict())  # HPA starts mid-range
-    elif method == "ds2":
-        baseline = DS2Controller()
-        execu.reconfigure(baseline_config(12).to_dict())
     else:
-        raise ValueError(f"unknown method {method!r}")
+        baseline, start = make_baseline(method, cmax)
+        if start != cmax:
+            execu.reconfigure(start.to_dict())
 
     dt = trace.dt_s
     n_steps = int(duration / dt)
-    failure_times = [FAILURE_INTERVAL_S * (k + 1)
-                     for k in range(int(duration / FAILURE_INTERVAL_S))]
+    schedule = failures_schedule if failures_schedule is not None \
+        else PeriodicFailures(FAILURE_INTERVAL_S)
+    failure_times = list(schedule.times(duration))
 
     times = np.zeros(n_steps)
     rates = np.zeros(n_steps)
@@ -136,6 +139,10 @@ def run_experiment(trace: Trace, method: str, *,
         # -- failure injection + ground-truth recovery measurement ----------
         if next_failure < len(failure_times) and t >= failure_times[next_failure]:
             execu.job.inject_failure()
+            if pending is not None:
+                # previous failure never resolved before this one landed:
+                # close it as NR rather than dropping it
+                failures.append(pending)
             pending = FailureRecord(t_inject=t, workload=rate, recovery_s=None)
             pending_reconf_count = (demeter.n_reconfigurations
                                     if demeter else n_reconf_baseline)

@@ -22,7 +22,7 @@ but shorten replay after failures.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -100,6 +100,255 @@ class ClusterModel:
 
     def allocated_mem_mb(self, cfg: JobConfig) -> float:
         return float(cfg.workers * cfg.memory_mb)
+
+    # -- batched surfaces (sweep engine hot path) ---------------------------
+    def capacity_batch(self, state: "BatchState") -> np.ndarray:
+        """Vectorized :meth:`capacity` over a batch of job states.
+
+        Replicates the scalar arithmetic operation-for-operation so a batched
+        sweep is bit-comparable with the scalar reference path."""
+        slots_total = np.minimum(state.workers * state.task_slots,
+                                 float(MAX_PARALLELISM))
+        workers_used = np.minimum(state.workers, slots_total)
+        slots_per_worker = slots_total / np.maximum(workers_used, 1.0)
+        mem_per_slot = state.memory_mb / np.maximum(state.task_slots, 1.0)
+        mem_f = 1.0 / (1.0 + (self.mem_half_mb / mem_per_slot)
+                       ** self.mem_exponent)
+        per_worker = (self.base_rate_per_core
+                      * state.cpu_cores ** self.cpu_exponent
+                      * slots_per_worker ** self.slot_exponent
+                      * mem_f)
+        ckpt_f = 1.0 / (1.0 + self.checkpoint_cost_s
+                        / np.maximum(state.checkpoint_interval_s, 1e-3))
+        return workers_used * per_worker * ckpt_f
+
+    def step_batch(self, state: "BatchState", rates: np.ndarray, dt: float,
+                   rngs: "Sequence[SupportsNormal] | BatchedNormals",
+                   capacity_base: Optional[np.ndarray] = None
+                   ) -> Dict[str, np.ndarray]:
+        """Advance every job in ``state`` by ``dt`` under per-job ``rates``.
+
+        The batch-of-one case reproduces :meth:`SimJob.step` exactly,
+        including the RNG draw order: one capacity-noise draw per job per
+        step, plus one latency-noise draw for each job that is up after the
+        downtime decrement (a down job draws no latency noise, mirroring the
+        early return in ``SimJob._latency``). ``rngs`` may be per-job scalar
+        streams or a :class:`BatchedNormals` (same per-stream sequences,
+        vectorized draws — the fast path).
+
+        ``capacity_base`` lets callers that track reconfigurations reuse the
+        config-only :meth:`capacity_batch` term instead of recomputing it
+        every step (it only changes when a job's configuration changes)."""
+        rates = np.asarray(rates, dtype=np.float64)
+        batched_rng = isinstance(rngs, BatchedNormals)
+        z1 = rngs.draw() if batched_rng \
+            else np.array([g.standard_normal() for g in rngs])
+        noise = 1.0 + self.noise * z1
+        if capacity_base is None:
+            capacity_base = self.capacity_batch(state)
+        cap = capacity_base * np.maximum(noise, 0.5)
+
+        down_pre = state.downtime_left_s > 0.0
+        state.downtime_left_s = np.where(
+            down_pre, np.maximum(state.downtime_left_s - dt, 0.0),
+            state.downtime_left_s)
+        since = np.where(down_pre, state.since_checkpoint_s,
+                         state.since_checkpoint_s + dt)
+        since = np.where(~down_pre & (since >= state.checkpoint_interval_s),
+                         0.0, since)
+        state.since_checkpoint_s = since
+
+        achievable = cap * dt
+        demand = rates * dt + state.lag_events
+        processed = np.minimum(achievable, demand)
+        state.lag_events = np.where(down_pre,
+                                    state.lag_events + rates * dt,
+                                    demand - processed)
+        throughput = np.where(down_pre, 0.0, processed / dt)
+
+        util = np.minimum(rates / np.maximum(cap, 1e-9), 1.5)
+        down_post = state.downtime_left_s > 0.0
+        if batched_rng:
+            z2 = np.abs(rngs.draw(~down_post))
+        else:
+            z2 = np.zeros(len(rngs))
+            for i in np.nonzero(~down_post)[0]:
+                z2[i] = abs(rngs[i].standard_normal())
+        latency = np.where(down_post, self.latency_cap_s,
+                           self._latency_batch(state, rates, cap, z2))
+
+        f = self.cpu_idle_frac
+        usage_cpu = state.workers * state.cpu_cores \
+            * (f + (1 - f) * np.minimum(util, 1.0))
+        state_mb = self.state_per_krate_mb * rates / 1000.0
+        mem_needed = state_mb / np.maximum(state.workers, 1.0) + 300.0
+        mem_frac = np.minimum(0.25 + 0.75 * mem_needed
+                              / np.maximum(state.memory_mb, 1.0), 1.0)
+        usage_mem = state.workers * state.memory_mb * mem_frac
+
+        state.last_rate = rates
+        return {
+            "rate": rates, "throughput": throughput, "capacity": cap,
+            "consumer_lag": state.lag_events, "latency": latency,
+            "utilization": util, "usage_cpu": usage_cpu,
+            "usage_mem_mb": usage_mem, "down": down_post.astype(np.float64),
+        }
+
+    def _latency_batch(self, state: "BatchState", rates: np.ndarray,
+                       cap: np.ndarray, z2: np.ndarray) -> np.ndarray:
+        rho = np.minimum(rates / np.maximum(cap, 1e-9), 0.999)
+        base = self.base_latency_s * (1.0 + self.queue_gamma
+                                      * rho / (1.0 - rho))
+        backlog_delay = state.lag_events / np.maximum(cap, 1e-9)
+        mem_per_slot = state.memory_mb / np.maximum(state.task_slots, 1.0)
+        gc_penalty = 0.25 * (1024.0 / mem_per_slot) ** 2 * rho
+        noisy = (base + backlog_delay + gc_penalty) * (1.0 + 0.05 * z2)
+        return np.minimum(noisy, self.latency_cap_s)
+
+    def inject_failure_batch(self, state: "BatchState", i: int) -> None:
+        """Batched mirror of :meth:`SimJob.inject_failure` for job ``i``."""
+        state_mb = self.state_size_mb(float(state.last_rate[i]))
+        restore = state_mb / (self.restore_mb_per_s
+                              * max(float(state.workers[i]), 1.0))
+        state.downtime_left_s[i] = self.failure_detect_s \
+            + self.redeploy_s + restore
+        state.lag_events[i] += state.last_rate[i] * state.since_checkpoint_s[i]
+        state.since_checkpoint_s[i] = 0.0
+
+    def reconfigure_batch(self, state: "BatchState", i: int, cfg: JobConfig,
+                          restart_s: Optional[float] = None) -> bool:
+        """Batched mirror of :meth:`SimJob.reconfigure`; True if applied."""
+        if state.config_of(i) == cfg:
+            return False
+        state.set_config(i, cfg)
+        state.downtime_left_s[i] = max(
+            float(state.downtime_left_s[i]),
+            self.reconfig_restart_s if restart_s is None else restart_s)
+        state.since_checkpoint_s[i] = 0.0
+        return True
+
+
+class SupportsNormal:
+    """Anything exposing ``standard_normal() -> float`` (typing aid)."""
+
+    def standard_normal(self) -> float:  # pragma: no cover - protocol only
+        raise NotImplementedError
+
+
+class BufferedNormals(SupportsNormal):
+    """Block-buffered view of a Generator's standard-normal stream.
+
+    ``Generator.standard_normal(n)`` produces bit-for-bit the same sequence
+    as ``n`` successive scalar draws, so buffering preserves step-for-step
+    equivalence with a scalar :class:`SimJob` seeded identically while
+    amortizing the per-draw call overhead in the batched hot path."""
+
+    __slots__ = ("rng", "_buf", "_pos")
+
+    BLOCK = 4096
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self._buf = np.empty(0)
+        self._pos = 0
+
+    def standard_normal(self) -> float:
+        if self._pos >= len(self._buf):
+            self._buf = self.rng.standard_normal(self.BLOCK)
+            self._pos = 0
+        v = self._buf[self._pos]
+        self._pos += 1
+        return v
+
+
+class BatchedNormals:
+    """Per-job standard-normal streams consumed through vectorized draws.
+
+    Row ``i`` yields bit-for-bit the sequence of ``BufferedNormals(seeds[i])``
+    (both consume the Generator's stream in BLOCK-sized chunks), but a whole
+    batch draw costs one fancy-indexing gather instead of a Python call per
+    job — the per-step RNG cost that otherwise dominates :meth:`step_batch`.
+    Refills happen per exhausted row, so rows may advance at different paces
+    (a down job skips its latency draw) without desynchronizing."""
+
+    __slots__ = ("rngs", "_buf", "_pos")
+
+    BLOCK = BufferedNormals.BLOCK
+
+    def __init__(self, seeds: Sequence[int]):
+        self.rngs = [np.random.default_rng(s) for s in seeds]
+        n = len(self.rngs)
+        self._buf = np.empty((n, self.BLOCK))
+        self._pos = np.full(n, self.BLOCK)
+
+    def __len__(self) -> int:
+        return len(self.rngs)
+
+    def draw(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """One draw from each (masked-in) stream; zeros elsewhere."""
+        idx = np.arange(len(self.rngs)) if mask is None \
+            else np.nonzero(mask)[0]
+        for i in idx[self._pos[idx] >= self.BLOCK]:
+            self._buf[i] = self.rngs[i].standard_normal(self.BLOCK)
+            self._pos[i] = 0
+        out = np.zeros(len(self.rngs))
+        out[idx] = self._buf[idx, self._pos[idx]]
+        self._pos[idx] += 1
+        return out
+
+
+@dataclass
+class BatchState:
+    """Struct-of-arrays state for a batch of simulated jobs (one row per
+    sweep scenario).  All arrays are float64 of shape ``[n_jobs]``."""
+
+    workers: np.ndarray
+    cpu_cores: np.ndarray
+    memory_mb: np.ndarray
+    task_slots: np.ndarray
+    checkpoint_interval_s: np.ndarray
+    lag_events: np.ndarray
+    downtime_left_s: np.ndarray
+    since_checkpoint_s: np.ndarray
+    last_rate: np.ndarray
+
+    @classmethod
+    def from_configs(cls, configs: Sequence[JobConfig]) -> "BatchState":
+        n = len(configs)
+        return cls(
+            workers=np.array([c.workers for c in configs], dtype=np.float64),
+            cpu_cores=np.array([c.cpu_cores for c in configs],
+                               dtype=np.float64),
+            memory_mb=np.array([c.memory_mb for c in configs],
+                               dtype=np.float64),
+            task_slots=np.array([c.task_slots for c in configs],
+                                dtype=np.float64),
+            checkpoint_interval_s=np.array(
+                [c.checkpoint_interval_s for c in configs], dtype=np.float64),
+            lag_events=np.zeros(n), downtime_left_s=np.zeros(n),
+            since_checkpoint_s=np.zeros(n), last_rate=np.zeros(n),
+        )
+
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    def config_of(self, i: int) -> JobConfig:
+        return JobConfig(
+            workers=int(self.workers[i]), cpu_cores=int(self.cpu_cores[i]),
+            memory_mb=int(self.memory_mb[i]),
+            task_slots=int(self.task_slots[i]),
+            checkpoint_interval_s=float(self.checkpoint_interval_s[i]))
+
+    def set_config(self, i: int, cfg: JobConfig) -> None:
+        self.workers[i] = cfg.workers
+        self.cpu_cores[i] = cfg.cpu_cores
+        self.memory_mb[i] = cfg.memory_mb
+        self.task_slots[i] = cfg.task_slots
+        self.checkpoint_interval_s[i] = cfg.checkpoint_interval_s
+
+    @property
+    def caught_up(self) -> np.ndarray:
+        return (self.downtime_left_s <= 0.0) & (self.lag_events < 1.0)
 
 
 @dataclass

@@ -1,0 +1,553 @@
+"""Batched multi-scenario sweep engine for the DSP evaluation stack.
+
+The paper-protocol harness (:mod:`repro.dsp.runner`) replays one
+(trace, controller, seed) cell at a time through a scalar Python loop. This
+module executes a whole :class:`ScenarioSpec` grid — trace class x controller
+x seed x failure schedule — as a single vectorized run:
+
+* the cluster/queueing model hot path advances **all** scenarios at once via
+  :meth:`ClusterModel.step_batch` over a struct-of-arrays
+  :class:`~repro.dsp.simulator.BatchState`;
+* per-controller decision logic runs per decision/optimization interval
+  (every ``decision_interval_s`` for the baselines, the paper's metric /
+  profiling / optimization cadences for Demeter), never per simulation step;
+* the scalar path (one :class:`~repro.dsp.simulator.SimJob` per scenario)
+  is kept as a reference oracle: ``run_sweep(..., engine="scalar")`` drives
+  the *same* orchestration through the scalar simulator, and the two engines
+  produce bit-comparable results on a shared seed.
+
+Failure injection, NR bookkeeping and the 6-minute recovery cap follow the
+runner's Table-3 semantics.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..core.config_space import paper_flink_space
+from ..core.demeter import DemeterController, DemeterHyperParams
+from .baselines import make_baseline
+from .executor import (allocated_cost, observe_digest, profile_one,
+                       ProfileCost)
+from .runner import (FAILURE_INTERVAL_S, METRIC_WINDOW_S, OPT_INTERVAL_S,
+                     RECOVERY_CAP_S, FailureRecord)
+from .simulator import (BatchedNormals, BatchState, ClusterModel, JobConfig,
+                        SimJob)
+from .workloads import (FailureSchedule, NoFailures, PeriodicFailures, Trace,
+                        make_trace)
+
+CONTROLLER_NAMES = ("static", "reactive", "ds2", "demeter")
+
+#: Metric keys kept as full per-scenario history (controller windows +
+#: result arrays both read from these).
+_HIST_KEYS = ("rate", "latency", "utilization", "throughput", "consumer_lag",
+              "usage_cpu", "usage_mem_mb")
+
+
+@dataclass(frozen=True, eq=False)
+class ScenarioSpec:
+    """One cell of a sweep grid."""
+
+    trace: Trace
+    controller: str = "static"
+    seed: int = 0
+    failures: FailureSchedule = field(default_factory=NoFailures)
+    label: str = ""
+
+    def __post_init__(self) -> None:
+        if self.controller not in CONTROLLER_NAMES:
+            raise ValueError(f"unknown controller {self.controller!r}; "
+                             f"available: {CONTROLLER_NAMES}")
+
+    @property
+    def name(self) -> str:
+        return self.label or \
+            f"{self.trace.name}/{self.controller}/s{self.seed}"
+
+
+def scenario_grid(traces: Sequence[Trace],
+                  controllers: Sequence[str],
+                  seeds: Sequence[int],
+                  failures: Optional[FailureSchedule] = None
+                  ) -> List[ScenarioSpec]:
+    """Cartesian trace x controller x seed grid with a shared schedule."""
+    failures = failures if failures is not None else NoFailures()
+    return [ScenarioSpec(trace=t, controller=c, seed=s, failures=failures)
+            for t in traces for c in controllers for s in seeds]
+
+
+def paper_grid(controllers: Sequence[str] = ("static", "reactive", "ds2"),
+               seeds: Sequence[int] = (0,),
+               trace_kinds: Sequence[str] = ("ysb", "tsw", "diurnal"),
+               duration_s: float = 18 * 3600.0, dt_s: float = 5.0
+               ) -> List[ScenarioSpec]:
+    """Paper-style grid: named trace classes under 45-minute failures."""
+    traces = [make_trace(k, duration_s=duration_s, dt_s=dt_s)
+              for k in trace_kinds]
+    return scenario_grid(traces, controllers, seeds,
+                         failures=PeriodicFailures(FAILURE_INTERVAL_S))
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ScenarioResult:
+    """Per-scenario telemetry + Table-3 style bookkeeping."""
+
+    name: str
+    trace: str
+    controller: str
+    seed: int
+    times: np.ndarray
+    rates: np.ndarray
+    latencies: np.ndarray
+    usage_cpu: np.ndarray
+    usage_mem_mb: np.ndarray
+    workers: np.ndarray
+    consumer_lag: np.ndarray
+    failures: List[FailureRecord]
+    n_reconfigurations: int
+    profile_cpu_s: float = 0.0
+    profile_mem_mb_s: float = 0.0
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-serializable scenario digest."""
+        dt = float(self.times[1] - self.times[0]) if len(self.times) > 1 \
+            else 1.0
+        lat = self.latencies[np.isfinite(self.latencies)]
+        rec = [(None if f.recovery_s is None
+                else ("6m+" if not np.isfinite(f.recovery_s)
+                      else round(float(f.recovery_s), 1)))
+               for f in self.failures]
+        return {
+            "name": self.name, "trace": self.trace,
+            "controller": self.controller, "seed": self.seed,
+            "duration_s": float(len(self.times) * dt),
+            "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else None,
+            "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else None,
+            "latency_p99_s": float(np.percentile(lat, 99)) if len(lat) else None,
+            "frac_latency_below_2s": float(np.mean(lat < 2.0)) if len(lat)
+            else None,
+            "mean_consumer_lag": float(np.mean(self.consumer_lag)),
+            "cumulative_cpu_core_s": float(np.sum(self.usage_cpu) * dt),
+            "cumulative_mem_mb_s": float(np.sum(self.usage_mem_mb) * dt),
+            "profile_cpu_core_s": float(self.profile_cpu_s),
+            "profile_mem_mb_s": float(self.profile_mem_mb_s),
+            "n_reconfigurations": int(self.n_reconfigurations),
+            "n_failures_injected": len(self.failures),
+            "recoveries_s": rec,
+        }
+
+    def allclose(self, other: "ScenarioResult", rtol: float = 1e-9,
+                 atol: float = 1e-9) -> bool:
+        """Step-for-step equivalence check against another engine's result."""
+        arrays = ("times", "rates", "latencies", "usage_cpu", "usage_mem_mb",
+                  "workers", "consumer_lag")
+        if not all(np.allclose(getattr(self, a), getattr(other, a),
+                               rtol=rtol, atol=atol) for a in arrays):
+            return False
+        if self.n_reconfigurations != other.n_reconfigurations:
+            return False
+        if len(self.failures) != len(other.failures):
+            return False
+        for fa, fb in zip(self.failures, other.failures):
+            if (fa.recovery_s is None) != (fb.recovery_s is None):
+                return False
+            if fa.recovery_s is not None and \
+                    not np.isclose(fa.recovery_s, fb.recovery_s):
+                return False
+        return True
+
+
+@dataclass
+class SweepResult:
+    engine: str
+    scenarios: List[ScenarioResult]
+    wall_s: float
+    n_steps: int
+
+    def by_name(self) -> Dict[str, ScenarioResult]:
+        return {s.name: s for s in self.scenarios}
+
+    def to_json(self) -> Dict[str, object]:
+        return {"engine": self.engine, "wall_s": self.wall_s,
+                "n_steps": self.n_steps,
+                "scenarios": [s.summary() for s in self.scenarios]}
+
+
+# ---------------------------------------------------------------------------
+# stepping backends
+# ---------------------------------------------------------------------------
+
+class _BatchedBackend:
+    """All scenarios advance through one vectorized step_batch call."""
+
+    def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
+                 seeds: Sequence[int]):
+        self.model = model
+        self.state = BatchState.from_configs(configs)
+        self.rngs = BatchedNormals(seeds)
+        # Config-derived values only change on reconfiguration; cache them.
+        self._cap_base = model.capacity_batch(self.state)
+        self._cfg_cache = list(configs)
+
+    def step_all(self, rates: np.ndarray, dt: float) -> Dict[str, np.ndarray]:
+        return self.model.step_batch(self.state, rates, dt, self.rngs,
+                                     capacity_base=self._cap_base)
+
+    def inject_failure(self, i: int) -> None:
+        self.model.inject_failure_batch(self.state, i)
+
+    def reconfigure(self, i: int, cfg: JobConfig,
+                    restart_s: Optional[float] = None) -> bool:
+        applied = self.model.reconfigure_batch(self.state, i, cfg, restart_s)
+        if applied:
+            self._cap_base[i] = self.model.capacity(cfg)
+            self._cfg_cache[i] = cfg
+        return applied
+
+    def config_of(self, i: int) -> JobConfig:
+        return self._cfg_cache[i]
+
+    def workers(self) -> np.ndarray:
+        return self.state.workers
+
+    def caught_up(self) -> np.ndarray:
+        return self.state.caught_up
+
+
+class _ScalarBackend:
+    """Reference oracle: one SimJob per scenario, stepped in a Python loop."""
+
+    def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
+                 seeds: Sequence[int]):
+        self.model = model
+        self.jobs = [SimJob(model, c, seed=s)
+                     for c, s in zip(configs, seeds)]
+
+    def step_all(self, rates: np.ndarray, dt: float) -> Dict[str, np.ndarray]:
+        ms = [job.step(float(r), dt) for job, r in zip(self.jobs, rates)]
+        return {k: np.array([m[k] for m in ms]) for k in ms[0]}
+
+    def inject_failure(self, i: int) -> None:
+        self.jobs[i].inject_failure()
+
+    def reconfigure(self, i: int, cfg: JobConfig,
+                    restart_s: Optional[float] = None) -> bool:
+        if self.jobs[i].config == cfg:
+            return False
+        self.jobs[i].reconfigure(cfg, restart_s=restart_s)
+        return True
+
+    def config_of(self, i: int) -> JobConfig:
+        return self.jobs[i].config
+
+    def workers(self) -> np.ndarray:
+        return np.array([float(j.config.workers) for j in self.jobs])
+
+    def caught_up(self) -> np.ndarray:
+        return np.array([j.caught_up for j in self.jobs])
+
+
+_BACKENDS = {"batched": _BatchedBackend, "scalar": _ScalarBackend}
+
+
+# ---------------------------------------------------------------------------
+# controller policies (invoked per decision interval, not per sim step)
+# ---------------------------------------------------------------------------
+
+class _BaselinePolicy:
+    """Wraps a decide()-style controller at a fixed decision cadence.
+
+    ``act`` returns the next time the policy is due, so the engine schedules
+    it by event time instead of polling every simulation step."""
+
+    def __init__(self, kind: str):
+        self.ctl, self.start_config = make_baseline(kind)
+
+    def initial_due(self, eng: "SweepEngine") -> float:
+        return eng.decision_interval_s
+
+    #: what decide()-style controllers actually consume from a window
+    WINDOW_KEYS = ("utilization", "rate", "throughput", "latency")
+
+    def act(self, eng: "SweepEngine", idx: int, t: float, i: int) -> float:
+        window = eng.window_dicts(idx, i, METRIC_WINDOW_S,
+                                  keys=self.WINDOW_KEYS)
+        current = eng.backend.config_of(idx)
+        new = self.ctl.decide(t, window, current)
+        if new is not None:
+            eng.apply_reconfig(idx, new,
+                               getattr(self.ctl, "restart_s", None))
+        return t + eng.decision_interval_s
+
+
+class _ScenarioView:
+    """Demeter ``Executor`` protocol served from the sweep engine's batch
+    state + telemetry history for one scenario row."""
+
+    def __init__(self, eng: "SweepEngine", idx: int, seed: int):
+        self.eng = eng
+        self.idx = idx
+        self.seed = seed
+        self.cmax = JobConfig()
+        self.profile_cost = ProfileCost()
+        self.step_index = 0          # advanced by the engine each sim step
+
+    def cmax_config(self) -> Dict[str, float]:
+        return self.cmax.to_dict()
+
+    def current_config(self) -> Dict[str, float]:
+        return self.eng.backend.config_of(self.idx).to_dict()
+
+    def reconfigure(self, config: Mapping[str, float]) -> None:
+        self.eng.apply_reconfig(self.idx, JobConfig.from_dict(config), None)
+
+    OBSERVE_KEYS = ("rate", "latency", "usage_cpu", "usage_mem_mb")
+
+    def observe(self) -> Dict[str, float]:
+        w = self.eng.window_dicts(self.idx, self.step_index, 60.0,
+                                  keys=self.OBSERVE_KEYS)
+        return observe_digest(self.eng.model, self.cmax, w)
+
+    def profile(self, configs: List[Dict[str, float]], rate: float
+                ) -> List[Optional[Dict[str, float]]]:
+        dt = self.eng.dt
+        return [profile_one(self.eng.model, self.cmax,
+                            JobConfig.from_dict(c), rate, dt,
+                            seed=self.seed * 1009 + i + int(rate),
+                            account=lambda m: self.profile_cost.add(m, dt))
+                for i, c in enumerate(configs)]
+
+    def allocated_cost(self, config: Mapping[str, float]) -> float:
+        return allocated_cost(self.eng.model, self.cmax, config)
+
+
+class _DemeterPolicy:
+    """Demeter's two processes at the paper cadences (§3.2)."""
+
+    def __init__(self, eng: "SweepEngine", idx: int, seed: int,
+                 hp: Optional[DemeterHyperParams]):
+        self.view = _ScenarioView(eng, idx, seed)
+        self.start_config = self.view.cmax
+        self.ctl = DemeterController(paper_flink_space(), self.view,
+                                     hp=hp or DemeterHyperParams())
+        self._next_ingest = METRIC_WINDOW_S
+        self._next_opt = OPT_INTERVAL_S
+        # async offset between the two processes (mirrors runner.py)
+        self._next_prof = OPT_INTERVAL_S / 2.0 + self.ctl.hp.profile_interval_s
+
+    def initial_due(self, eng: "SweepEngine") -> float:
+        return min(self._next_ingest, self._next_prof, self._next_opt)
+
+    def act(self, eng: "SweepEngine", idx: int, t: float, i: int) -> float:
+        self.view.step_index = i
+        if t >= self._next_ingest:
+            self._next_ingest = t + METRIC_WINDOW_S
+            obs = self.view.observe()
+            if obs:
+                self.ctl.ingest(obs)
+        if t >= self._next_prof:
+            self._next_prof = t + self.ctl.hp.profile_interval_s
+            self.ctl.profiling_step()
+        if t >= self._next_opt:
+            self._next_opt = t + OPT_INTERVAL_S
+            # Push the telemetry the engine already holds instead of having
+            # the controller pull it back through the executor protocol.
+            self.ctl.optimization_step(metrics=self.view.observe())
+        return min(self._next_ingest, self._next_prof, self._next_opt)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class SweepEngine:
+    """Executes a ScenarioSpec grid; same orchestration for both backends."""
+
+    def __init__(self, specs: Sequence[ScenarioSpec], *,
+                 model: Optional[ClusterModel] = None,
+                 hp: Optional[DemeterHyperParams] = None,
+                 decision_interval_s: float = 60.0,
+                 recovery_cap_s: float = RECOVERY_CAP_S):
+        if not specs:
+            raise ValueError("empty scenario grid")
+        dts = {s.trace.dt_s for s in specs}
+        if len(dts) > 1:
+            raise ValueError(f"all traces must share dt_s, got {sorted(dts)}")
+        self.specs = list(specs)
+        self.model = model or ClusterModel()
+        self.hp = hp
+        self.decision_interval_s = decision_interval_s
+        self.recovery_cap_s = recovery_cap_s
+        self.dt = float(specs[0].trace.dt_s)
+
+        S = len(self.specs)
+        self.n_steps_each = np.array(
+            [int(s.trace.duration_s / self.dt) for s in self.specs])
+        self.n_steps = int(self.n_steps_each.max())
+        # Rate matrix, padded with each trace's final value (padded steps are
+        # simulated for batch-shape uniformity but excluded from results).
+        self.R = np.empty((S, self.n_steps))
+        for j, s in enumerate(self.specs):
+            n = self.n_steps_each[j]
+            self.R[j, :n] = s.trace.rates[:n]
+            self.R[j, n:] = s.trace.rates[n - 1] if n else 0.0
+        self.fail_times = [s.failures.times(s.trace.duration_s)
+                           for s in self.specs]
+
+        # set by run()
+        self.backend = None
+        self.hist: Dict[str, np.ndarray] = {}
+        self.workers_hist: Optional[np.ndarray] = None
+        self.reconf_count = np.zeros(S, dtype=int)
+
+    # -- services used by controller policies -------------------------------
+    def window_dicts(self, idx: int, i: int, seconds: float,
+                     keys: Sequence[str] = _HIST_KEYS
+                     ) -> List[Dict[str, float]]:
+        """Last ``seconds`` of scenario ``idx``'s telemetry as metric dicts
+        (the shape decide()-style controllers consume), ending at step i."""
+        n = max(int(seconds / self.dt), 1)
+        lo = max(i - n + 1, 0)
+        cols = [self.hist[k][idx, lo:i + 1] for k in keys]
+        return [dict(zip(keys, row)) for row in zip(*cols)]
+
+    def apply_reconfig(self, idx: int, cfg: JobConfig,
+                       restart_s: Optional[float]) -> None:
+        if self.backend.reconfigure(idx, cfg, restart_s):
+            self.reconf_count[idx] += 1
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, engine: str = "batched") -> SweepResult:
+        try:
+            backend_cls = _BACKENDS[engine]
+        except KeyError:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"available: {sorted(_BACKENDS)}") from None
+        S = len(self.specs)
+        policies = []
+        seeds = [s.seed for s in self.specs]
+        # Policies are built first so their start configs seed the backend.
+        self.backend = None
+        for j, spec in enumerate(self.specs):
+            if spec.controller == "demeter":
+                policies.append(_DemeterPolicy(self, j, spec.seed, self.hp))
+            else:
+                policies.append(_BaselinePolicy(spec.controller))
+        configs = [p.start_config for p in policies]
+        self.backend = backend_cls(self.model, configs, seeds)
+        self.reconf_count = np.zeros(S, dtype=int)
+        self.hist = {k: np.zeros((S, self.n_steps)) for k in _HIST_KEYS}
+        self.workers_hist = np.zeros((S, self.n_steps))
+
+        pending: Dict[int, FailureRecord] = {}
+        pending_reconf = np.zeros(S, dtype=int)
+        next_fail = np.zeros(S, dtype=int)
+        #: time of each scenario's next injection (inf when exhausted)
+        nf_time = np.array([ft[0] if len(ft) else np.inf
+                            for ft in self.fail_times])
+        failures: List[List[FailureRecord]] = [[] for _ in range(S)]
+        policy_next = np.array([p.initial_due(self) for p in policies])
+        end_time = self.n_steps_each * self.dt
+        uniform = bool(np.all(self.n_steps_each == self.n_steps))
+
+        t0 = time.perf_counter()
+        for i in range(self.n_steps):
+            t = i * self.dt
+            m = self.backend.step_all(self.R[:, i], self.dt)
+            for k in _HIST_KEYS:
+                self.hist[k][:, i] = m[k]
+            self.workers_hist[:, i] = self.backend.workers()
+            active = None if uniform else (t < end_time)
+
+            # -- failure injection + Table-3 recovery bookkeeping ----------
+            due = t >= nf_time
+            if active is not None:
+                due &= active
+            injected = ()
+            if due.any():
+                injected = np.nonzero(due)[0]
+                for j in injected:
+                    self.backend.inject_failure(j)
+                    if j in pending:
+                        # previous failure never resolved before this one
+                        # landed: close it as NR rather than dropping it
+                        failures[j].append(pending[j])
+                    pending[j] = FailureRecord(t_inject=t,
+                                               workload=float(self.R[j, i]),
+                                               recovery_s=None)
+                    pending_reconf[j] = self.reconf_count[j]
+                    next_fail[j] += 1
+                    ft = self.fail_times[j]
+                    nf_time[j] = ft[next_fail[j]] \
+                        if next_fail[j] < len(ft) else np.inf
+            if pending:
+                caught = self.backend.caught_up()
+                for j in [j for j in pending
+                          if j not in injected
+                          and (active is None or active[j])]:
+                    rec = pending[j]
+                    elapsed = t - rec.t_inject
+                    if self.reconf_count[j] != pending_reconf[j]:
+                        rec.recovery_s = None       # NR: reconfig overlapped
+                    elif caught[j]:
+                        rec.recovery_s = elapsed
+                    elif elapsed > self.recovery_cap_s * 2:
+                        rec.recovery_s = float("inf")
+                        rec.capped = True
+                    else:
+                        continue
+                    failures[j].append(rec)
+                    del pending[j]
+
+            # -- controller decisions (event-scheduled, not per-step) ------
+            pol_due = t >= policy_next
+            if active is not None:
+                pol_due &= active
+            if pol_due.any():
+                for j in np.nonzero(pol_due)[0]:
+                    policy_next[j] = policies[j].act(self, j, t, i)
+        wall = time.perf_counter() - t0
+
+        results = []
+        for j, spec in enumerate(self.specs):
+            if j in pending:
+                failures[j].append(pending[j])
+            n = int(self.n_steps_each[j])
+            view = getattr(policies[j], "view", None)
+            cost = view.profile_cost if view is not None else ProfileCost()
+            results.append(ScenarioResult(
+                name=spec.name, trace=spec.trace.name,
+                controller=spec.controller, seed=spec.seed,
+                times=np.arange(n) * self.dt,
+                rates=self.hist["rate"][j, :n].copy(),
+                latencies=self.hist["latency"][j, :n].copy(),
+                usage_cpu=self.hist["usage_cpu"][j, :n].copy(),
+                usage_mem_mb=self.hist["usage_mem_mb"][j, :n].copy(),
+                workers=self.workers_hist[j, :n].copy(),
+                consumer_lag=self.hist["consumer_lag"][j, :n].copy(),
+                failures=failures[j],
+                n_reconfigurations=int(self.reconf_count[j]),
+                profile_cpu_s=cost.cpu_s, profile_mem_mb_s=cost.mem_mb_s,
+            ))
+        return SweepResult(engine=engine, scenarios=results, wall_s=wall,
+                           n_steps=self.n_steps)
+
+
+def run_sweep(specs: Sequence[ScenarioSpec], *,
+              engine: str = "batched",
+              model: Optional[ClusterModel] = None,
+              hp: Optional[DemeterHyperParams] = None,
+              decision_interval_s: float = 60.0) -> SweepResult:
+    """Execute a scenario grid in one invocation.
+
+    ``engine="batched"`` is the vectorized hot path; ``engine="scalar"`` is
+    the per-scenario SimJob reference oracle (identical orchestration)."""
+    return SweepEngine(specs, model=model, hp=hp,
+                       decision_interval_s=decision_interval_s).run(engine)

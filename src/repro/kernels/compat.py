@@ -1,0 +1,24 @@
+"""Pallas API compatibility shims.
+
+The Pallas TPU surface has drifted across JAX releases: the compiler-params
+dataclass was renamed ``TPUCompilerParams`` -> ``CompilerParams`` (and very
+old releases took a plain ``dict(mosaic=...)``).  Kernels import the resolved
+symbols from here instead of touching ``jax.experimental.pallas.tpu``
+directly, so a single feature-detection point absorbs future renames.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:  # pragma: no cover - pre-0.4.31 releases pass a raw mosaic dict
+    def CompilerParams(**kwargs: Any) -> dict:
+        return dict(mosaic=kwargs)
+
+
+__all__ = ["CompilerParams"]

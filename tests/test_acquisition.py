@@ -1,6 +1,7 @@
 """Acquisition-function tests: exact EHVI vs Monte Carlo, HV properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property-based tests need the optional dep
 from hypothesis import given, settings, strategies as st
 from scipy import stats
 

@@ -1,6 +1,7 @@
 """Unit tests for the Demeter modeling stack (GP, ARIMA, RGPE, latency)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property-based tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (GP, LatencyConstraint, OnlineARIMA, RGPEnsemble,

@@ -1,6 +1,7 @@
 """DSP substrate tests: simulator physics, workloads, baselines, anomaly."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property-based tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RecoveryTracker

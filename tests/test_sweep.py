@@ -1,0 +1,262 @@
+"""Sweep engine tests: batched-vs-scalar equivalence, trace generators,
+failure schedules, grid construction."""
+import numpy as np
+import pytest
+
+from repro.dsp import (BatchState, ClusterModel, FailuresAt, JobConfig,
+                       NoFailures, PeriodicFailures, ScenarioSpec, SimJob,
+                       TRACE_GENERATORS, make_trace, run_sweep, scenario_grid)
+from repro.dsp.simulator import BatchedNormals, BufferedNormals
+
+MODEL = ClusterModel()
+
+
+class TestBatchedStepEquivalence:
+    """ClusterModel.step_batch must match SimJob.step step-for-step."""
+
+    def test_matches_scalar_on_fixed_seed(self):
+        configs = [JobConfig(), JobConfig(workers=6), JobConfig(workers=4)]
+        seeds = [0, 1, 2]
+        jobs = [SimJob(MODEL, c, seed=s) for c, s in zip(configs, seeds)]
+        state = BatchState.from_configs(configs)
+        rngs = [BufferedNormals(s) for s in seeds]
+        rng = np.random.default_rng(42)
+        for _ in range(200):
+            rates = rng.uniform(20_000, 70_000, len(configs))
+            batch = MODEL.step_batch(state, rates, 5.0, rngs)
+            for j, job in enumerate(jobs):
+                scalar = job.step(float(rates[j]), 5.0)
+                for k, v in scalar.items():
+                    assert batch[k][j] == pytest.approx(v, rel=1e-12), \
+                        f"metric {k!r} diverged"
+
+    def test_matches_scalar_through_failure(self):
+        job = SimJob(MODEL, JobConfig(workers=4), seed=3)
+        state = BatchState.from_configs([JobConfig(workers=4)])
+        rngs = [BufferedNormals(3)]
+        for i in range(120):
+            if i == 40:
+                job.inject_failure()
+                MODEL.inject_failure_batch(state, 0)
+            batch = MODEL.step_batch(state, np.array([50_000.0]), 5.0, rngs)
+            scalar = job.step(50_000.0, 5.0)
+            for k, v in scalar.items():
+                assert batch[k][0] == pytest.approx(v, rel=1e-12)
+        assert state.caught_up[0] == job.caught_up
+
+    def test_matches_scalar_through_reconfigure(self):
+        job = SimJob(MODEL, JobConfig(workers=4), seed=5)
+        state = BatchState.from_configs([JobConfig(workers=4)])
+        rngs = [BufferedNormals(5)]
+        big = JobConfig(workers=12)
+        for i in range(120):
+            if i == 30:
+                job.reconfigure(big)
+                assert MODEL.reconfigure_batch(state, 0, big)
+            batch = MODEL.step_batch(state, np.array([45_000.0]), 5.0, rngs)
+            scalar = job.step(45_000.0, 5.0)
+            for k, v in scalar.items():
+                assert batch[k][0] == pytest.approx(v, rel=1e-12)
+
+    def test_reconfigure_batch_noop_on_same_config(self):
+        state = BatchState.from_configs([JobConfig()])
+        assert not MODEL.reconfigure_batch(state, 0, JobConfig())
+
+    def test_buffered_normals_match_generator(self):
+        ref = np.random.default_rng(9).standard_normal(5000)
+        buf = BufferedNormals(9)
+        got = np.array([buf.standard_normal() for _ in range(5000)])
+        np.testing.assert_array_equal(ref, got)
+
+    def test_batched_normals_match_buffered_streams(self):
+        seeds = [4, 8, 15]
+        batched = BatchedNormals(seeds)
+        scalar = [BufferedNormals(s) for s in seeds]
+        rng = np.random.default_rng(0)
+        # Masked draws advance streams at different paces, like down jobs
+        # skipping their latency draw; cross BLOCK boundaries to hit refills.
+        for _ in range(6000):
+            mask = rng.random(3) < 0.7
+            got = batched.draw(mask)
+            for i in range(3):
+                want = scalar[i].standard_normal() if mask[i] else 0.0
+                assert got[i] == want
+
+    def test_step_batch_same_with_batched_rng(self):
+        configs = [JobConfig(), JobConfig(workers=5)]
+        seeds = [21, 22]
+        state_a = BatchState.from_configs(configs)
+        state_b = BatchState.from_configs(configs)
+        rngs_a = [BufferedNormals(s) for s in seeds]
+        rngs_b = BatchedNormals(seeds)
+        MODEL.inject_failure_batch(state_a, 1)
+        MODEL.inject_failure_batch(state_b, 1)
+        for _ in range(300):
+            rates = np.array([40_000.0, 60_000.0])
+            ma = MODEL.step_batch(state_a, rates, 5.0, rngs_a)
+            mb = MODEL.step_batch(state_b, rates, 5.0, rngs_b)
+            for k in ma:
+                np.testing.assert_array_equal(ma[k], mb[k])
+
+
+class TestSweepEquivalence:
+    """run_sweep(engine='batched') must match the scalar reference oracle."""
+
+    @pytest.fixture(scope="class")
+    def grid(self):
+        traces = [make_trace(k, duration_s=1200.0, dt_s=5.0)
+                  for k in ("diurnal", "flash", "regime")]
+        return scenario_grid(traces, ("static", "reactive"), (0, 1),
+                             failures=PeriodicFailures(420.0))
+
+    def test_grid_shape(self, grid):
+        assert len(grid) == 12
+        assert len({s.name for s in grid}) == 12
+
+    def test_batched_matches_scalar(self, grid):
+        batched = run_sweep(grid, engine="batched")
+        scalar = run_sweep(grid, engine="scalar")
+        assert len(batched.scenarios) == len(scalar.scenarios) == len(grid)
+        for a, b in zip(batched.scenarios, scalar.scenarios):
+            assert a.name == b.name
+            assert a.allclose(b), f"{a.name} diverged between engines"
+
+    def test_failures_injected_and_summarized(self, grid):
+        res = run_sweep(grid, engine="batched")
+        for sc in res.scenarios:
+            assert len(sc.failures) == 2  # 420 s cadence over 1200 s
+            s = sc.summary()
+            assert s["n_failures_injected"] == 2
+            assert len(s["recoveries_s"]) == 2
+
+    def test_reactive_actually_reconfigures(self, grid):
+        res = run_sweep(grid, engine="batched").by_name()
+        assert any(r.n_reconfigurations > 0 for r in res.values()
+                   if r.controller == "reactive")
+        assert all(r.n_reconfigurations == 0 for r in res.values()
+                   if r.controller == "static")
+
+    def test_mixed_durations(self):
+        short = make_trace("diurnal", duration_s=600.0, dt_s=5.0)
+        long = make_trace("flash", duration_s=1200.0, dt_s=5.0)
+        specs = [ScenarioSpec(trace=short), ScenarioSpec(trace=long)]
+        res = run_sweep(specs, engine="batched")
+        assert len(res.scenarios[0].times) == 120
+        assert len(res.scenarios[1].times) == 240
+
+    def test_rejects_unknown_controller(self):
+        with pytest.raises(ValueError, match="unknown controller"):
+            ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0),
+                         controller="nope")
+
+    def test_rejects_unknown_engine(self):
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match="unknown engine"):
+            run_sweep([spec], engine="gpu")
+
+    def test_rejects_empty_grid(self):
+        with pytest.raises(ValueError, match="empty"):
+            run_sweep([])
+
+    def test_rejects_mixed_dt(self):
+        a = make_trace("diurnal", duration_s=300.0, dt_s=5.0)
+        b = make_trace("flash", duration_s=300.0, dt_s=10.0)
+        with pytest.raises(ValueError, match="dt_s"):
+            run_sweep([ScenarioSpec(trace=a), ScenarioSpec(trace=b)])
+
+
+@pytest.mark.slow
+class TestDemeterInSweep:
+    def test_demeter_batched_matches_scalar(self):
+        trace = make_trace("diurnal", duration_s=1800.0, dt_s=5.0)
+        specs = [ScenarioSpec(trace=trace, controller="demeter", seed=0,
+                              failures=NoFailures())]
+        batched = run_sweep(specs, engine="batched")
+        scalar = run_sweep(specs, engine="scalar")
+        assert batched.scenarios[0].allclose(scalar.scenarios[0])
+
+
+BOUNDS = {
+    "ysb": (24_000.0, 82_000.0),
+    "tsw": (8_000.0, 82_000.0),
+    "diurnal": (18_000.0, 78_000.0),
+    "flash": (22_000.0, 80_000.0),
+    "regime": (20_000.0, 80_000.0),
+    "sindrift": (20_000.0, 80_000.0),
+}
+
+
+class TestTraceGenerators:
+    @pytest.mark.parametrize("kind", sorted(TRACE_GENERATORS))
+    def test_rates_within_declared_bounds(self, kind):
+        tr = make_trace(kind, duration_s=7200.0, dt_s=5.0)
+        lo, hi = BOUNDS[kind]
+        assert tr.rates.min() >= lo
+        assert tr.rates.max() <= hi
+        assert np.all(np.isfinite(tr.rates))
+        assert len(tr.rates) == int(7200.0 / 5.0)
+        assert tr.dt_s == 5.0
+
+    @pytest.mark.parametrize("kind", sorted(TRACE_GENERATORS))
+    def test_deterministic_per_seed(self, kind):
+        a = make_trace(kind, duration_s=3600.0, dt_s=5.0, seed=17)
+        b = make_trace(kind, duration_s=3600.0, dt_s=5.0, seed=17)
+        np.testing.assert_array_equal(a.rates, b.rates)
+        c = make_trace(kind, duration_s=3600.0, dt_s=5.0, seed=18)
+        assert not np.array_equal(a.rates, c.rates)
+
+    @pytest.mark.parametrize("kind", sorted(TRACE_GENERATORS))
+    def test_traces_actually_vary(self, kind):
+        tr = make_trace(kind, duration_s=7200.0, dt_s=5.0)
+        assert tr.rates.std() > 100.0
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError, match="unknown trace class"):
+            make_trace("mystery")
+
+    @pytest.mark.parametrize("kind", sorted(TRACE_GENERATORS))
+    def test_tiny_traces_stay_finite(self, kind):
+        # two-sample traces used to NaN out via a zero-sum smoothing kernel
+        tr = make_trace(kind, duration_s=10.0, dt_s=5.0)
+        assert len(tr.rates) == 2
+        assert np.all(np.isfinite(tr.rates))
+
+
+class TestFailureSchedules:
+    def test_periodic_times(self):
+        np.testing.assert_allclose(PeriodicFailures(600.0).times(2000.0),
+                                   [600.0, 1200.0, 1800.0])
+
+    def test_periodic_offset(self):
+        np.testing.assert_allclose(
+            PeriodicFailures(600.0, offset_s=100.0).times(1400.0),
+            [100.0, 700.0, 1300.0])
+
+    def test_no_failures(self):
+        assert len(NoFailures().times(1e6)) == 0
+
+    def test_nonpositive_interval_injects_nothing(self):
+        assert len(PeriodicFailures(0.0).times(3600.0)) == 0
+        assert len(PeriodicFailures(-5.0).times(3600.0)) == 0
+
+    def test_nonpositive_offset_rejected(self):
+        with pytest.raises(ValueError, match="offset_s"):
+            PeriodicFailures(600.0, offset_s=0.0).times(2000.0)
+
+    def test_rapid_failures_all_recorded(self):
+        # injections spaced closer than the resolution window must not
+        # overwrite each other's records
+        tr = make_trace("diurnal", duration_s=900.0, dt_s=5.0)
+        spec = ScenarioSpec(trace=tr, failures=FailuresAt(100.0, 150.0, 200.0))
+        res = run_sweep([spec], engine="batched")
+        assert len(res.scenarios[0].failures) == 3
+        assert res.scenarios[0].summary()["n_failures_injected"] == 3
+
+    def test_failures_at_clips_to_duration(self):
+        np.testing.assert_allclose(
+            FailuresAt(100.0, 500.0, 5000.0).times(1000.0), [100.0, 500.0])
+
+    def test_union_composition(self):
+        sched = PeriodicFailures(600.0) | FailuresAt(50.0, 600.0)
+        np.testing.assert_allclose(sched.times(1300.0),
+                                   [50.0, 600.0, 1200.0])
