@@ -142,12 +142,17 @@ def sweep_main(args: argparse.Namespace) -> None:
           f"({len(traces)} traces x {len(args.controllers)} controllers "
           f"x {len(args.seeds)} seeds), {args.duration_h:g}h @ dt={args.dt:g}s")
 
-    batched = run_sweep(specs, engine="batched")
+    batched = run_sweep(specs, engine="batched", fit_backend=args.fit_backend)
     print(f"# batched engine: {batched.wall_s:.2f}s wall "
           f"({batched.n_steps} steps x {len(specs)} scenarios)")
+    if batched.n_model_fits:
+        print(f"# model updates ({args.fit_backend}): "
+              f"{batched.n_model_fits} GP fits, "
+              f"{batched.model_update_wall_s:.2f}s wall")
 
     if args.compare_scalar:
-        scalar = run_sweep(specs, engine="scalar")
+        scalar = run_sweep(specs, engine="scalar",
+                           fit_backend=args.fit_backend)
         mismatched = [a.name for a, b in
                       zip(batched.scenarios, scalar.scenarios)
                       if not a.allclose(b)]
@@ -204,6 +209,10 @@ def main() -> None:
     sw.add_argument("--compare-scalar", action="store_true",
                     help="also run the scalar reference oracle; verify "
                          "equivalence and report the wall-clock speedup")
+    sw.add_argument("--fit-backend", choices=("bank", "scalar"),
+                    default="bank",
+                    help="Demeter GP fitting path: batched jitted GPBank "
+                         "(default) or the per-GP scipy reference oracle")
     sw.set_defaults(func=sweep_main)
 
     pp = sub.add_parser("paper", help="paper-protocol cells (Table 3 etc.)")

@@ -1,0 +1,174 @@
+"""Batched-vs-scalar model-update benchmarks for the GP/MOBO engine.
+
+Two reports:
+
+* ``micro`` — fit a synthetic segment x objective x scenario batch of GP
+  datasets once through the scalar scipy loop (:meth:`repro.core.gp.GP.fit`)
+  and once through the batched jitted path
+  (:meth:`repro.core.gp_bank.GPBank.fit`), plus a batched-vs-loop EHVI
+  timing over candidate grids.
+* ``sweep`` — run a >=16-scenario all-Demeter grid through the sweep engine
+  with ``fit_backend="bank"`` and ``fit_backend="scalar"`` and compare the
+  accumulated model-update wall-clock (the number the paper's continuous
+  optimization loop actually pays).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/gp_bench.py micro
+    PYTHONPATH=src python benchmarks/gp_bench.py sweep --scenarios 16
+    PYTHONPATH=src python benchmarks/gp_bench.py all --json results/gp_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import GP, GPBank, DemeterHyperParams, ehvi_2d, ehvi_2d_batch
+from repro.core.demeter import FIT_MAX_ITER, FIT_RESTARTS
+from repro.dsp import ScenarioSpec, make_trace, run_sweep
+
+
+# ---------------------------------------------------------------------------
+# micro: raw fit + EHVI dispatch cost
+# ---------------------------------------------------------------------------
+def synth_datasets(n_models: int, dim: int = 5, seed: int = 0
+                   ) -> Tuple[List[Tuple[np.ndarray, np.ndarray]], List[int]]:
+    """Datasets shaped like per-segment training sets (5-20 points each)."""
+    rng = np.random.default_rng(seed)
+    datasets, seeds = [], []
+    for i in range(n_models):
+        n = int(rng.integers(5, 20))
+        x = rng.uniform(0, 1, (n, dim))
+        y = ((1.0 + 0.1 * (i % 7)) * (1.2 - x[:, 0])
+             + 0.4 * x[:, 1] ** 2 + rng.normal(0, 0.05, n))
+        datasets.append((x, y))
+        seeds.append(i * 131)
+    return datasets, seeds
+
+
+def micro_fit(n_models: int) -> Dict[str, float]:
+    datasets, seeds = synth_datasets(n_models)
+
+    # warm the jit caches so the batched number is the steady-state cost
+    GPBank.fit(datasets, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
+               seeds=seeds)
+    t0 = time.perf_counter()
+    GPBank.fit(datasets, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
+               seeds=seeds)
+    bank_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for (x, y), s in zip(datasets, seeds):
+        GP.fit(x, y, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER, seed=s)
+    scalar_s = time.perf_counter() - t0
+
+    out = {"n_models": n_models, "scalar_fit_s": scalar_s,
+           "bank_fit_s": bank_s, "fit_speedup": scalar_s / max(bank_s, 1e-9)}
+    print(f"fit       x{n_models:<4d} scalar {scalar_s:8.2f}s   "
+          f"bank {bank_s:8.3f}s   speedup {out['fit_speedup']:7.1f}x")
+    return out
+
+
+def micro_ehvi(B: int = 16, n: int = 2592, k: int = 12,
+               seed: int = 0) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    mu = rng.uniform(0, 5, (B, n, 2))
+    var = rng.uniform(0.01, 1.0, (B, n, 2))
+    fronts = [rng.uniform(0, 4, (k, 2)) for _ in range(B)]
+    refs = np.full((B, 2), 5.0)
+
+    ehvi_2d_batch(mu, var, fronts, refs)          # warm the jit cache
+    t0 = time.perf_counter()
+    ehvi_2d_batch(mu, var, fronts, refs)
+    batch_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(B):
+        ehvi_2d(mu[i], var[i], fronts[i], (5.0, 5.0))
+    loop_s = time.perf_counter() - t0
+
+    out = {"B": B, "n_candidates": n, "numpy_loop_s": loop_s,
+           "batched_s": batch_s, "ehvi_speedup": loop_s / max(batch_s, 1e-9)}
+    print(f"ehvi {B}x{n}   numpy {loop_s*1e3:8.1f}ms   "
+          f"batched {batch_s*1e3:8.1f}ms   speedup {out['ehvi_speedup']:7.1f}x")
+    return out
+
+
+def micro_main(args: argparse.Namespace) -> Dict[str, object]:
+    print("== micro: one model-update batch, scalar loop vs GPBank ==")
+    fits = [micro_fit(n) for n in args.model_counts]
+    print("== micro: EHVI over candidate grids, numpy loop vs jitted batch ==")
+    ehvi = micro_ehvi(B=16)
+    return {"fits": fits, "ehvi": ehvi}
+
+
+# ---------------------------------------------------------------------------
+# sweep: model-update wall across a >=16-scenario Demeter grid
+# ---------------------------------------------------------------------------
+def sweep_main(args: argparse.Namespace) -> Dict[str, object]:
+    n_traces = max(1, args.scenarios // max(len(args.seeds), 1))
+    kinds = ("diurnal", "flash", "regime", "sindrift")
+    traces = [make_trace(kinds[i % len(kinds)],
+                         duration_s=args.duration_h * 3600.0, dt_s=args.dt,
+                         seed=i) for i in range(n_traces)]
+    specs = [ScenarioSpec(trace=t, controller="demeter", seed=s)
+             for t in traces for s in args.seeds]
+    hp = DemeterHyperParams(profile_interval_s=args.profile_interval_s)
+    print(f"== sweep: {len(specs)} Demeter scenarios x "
+          f"{args.duration_h:g}h @ dt={args.dt:g}s ==")
+
+    out: Dict[str, object] = {"n_scenarios": len(specs),
+                              "duration_h": args.duration_h}
+    for backend in ("bank", "scalar"):
+        t0 = time.perf_counter()
+        res = run_sweep(specs, hp=hp, fit_backend=backend)
+        total = time.perf_counter() - t0
+        out[backend] = {"model_update_wall_s": res.model_update_wall_s,
+                        "n_model_fits": res.n_model_fits,
+                        "total_wall_s": total}
+        print(f"{backend:6s}: {res.n_model_fits:4d} fits, model-update wall "
+              f"{res.model_update_wall_s:8.2f}s (sweep total {total:.1f}s)")
+    speedup = (out["scalar"]["model_update_wall_s"]
+               / max(out["bank"]["model_update_wall_s"], 1e-9))
+    out["model_update_speedup"] = speedup
+    print(f"model-update speedup (scalar / bank): {speedup:.1f}x")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("cmd", choices=("micro", "sweep", "all"))
+    ap.add_argument("--model-counts", type=lambda v: [int(x) for x in
+                                                      v.split(",")],
+                    default=[16, 96], help="micro: batch sizes to fit")
+    ap.add_argument("--scenarios", type=int, default=16)
+    ap.add_argument("--seeds", type=lambda v: [int(x) for x in v.split(",")],
+                    default=[0])
+    ap.add_argument("--duration-h", type=float, default=3.0)
+    ap.add_argument("--dt", type=float, default=5.0)
+    ap.add_argument("--profile-interval-s", type=float, default=600.0,
+                    help="denser profiling than the paper's 1500s so short "
+                         "benchmark runs still exercise many model updates")
+    ap.add_argument("--json", default=None,
+                    help="also write the report to this JSON path")
+    args = ap.parse_args()
+
+    report: Dict[str, object] = {}
+    if args.cmd in ("micro", "all"):
+        report["micro"] = micro_main(args)
+    if args.cmd in ("sweep", "all"):
+        report["sweep"] = sweep_main(args)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Documentation checks: local link integrity + doctests in fenced examples.
+
+Scans ``README.md`` and ``docs/*.md`` for
+
+* markdown links to local files — every target must exist (external
+  ``http(s)://`` links and pure ``#anchor`` links are skipped);
+* fenced ```````python`````` blocks containing ``>>>`` prompts — each block
+  is executed with :mod:`doctest` (imports resolve against ``src/``).
+
+Exit code 0 when everything passes; failures are listed on stderr. Run as::
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+# Fenced examples import the package; make the checker self-contained even
+# when PYTHONPATH=src was not exported.
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        local = target.split("#", 1)[0]
+        if not local:
+            continue
+        if not (path.parent / local).exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def check_doctests(path: Path) -> list[str]:
+    errors = []
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    parser = doctest.DocTestParser()
+    for i, block in enumerate(_FENCE.findall(path.read_text())):
+        if ">>>" not in block:
+            continue
+        test = parser.get_doctest(block, {}, f"{path.name}[{i}]", str(path), 0)
+        out: list[str] = []
+        runner.run(test, out=out.append)
+        if runner.failures:
+            errors.append(f"{path.relative_to(REPO)}: doctest block {i} "
+                          f"failed\n" + "".join(out))
+            runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    return errors
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path in DOC_FILES:
+        if not path.exists():
+            errors.append(f"missing doc file: {path.relative_to(REPO)}")
+            continue
+        errors += check_links(path)
+        errors += check_doctests(path)
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\n{len(errors)} documentation problem(s)", file=sys.stderr)
+        return 1
+    n = len(DOC_FILES)
+    print(f"docs OK: {n} files, links + fenced doctests clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

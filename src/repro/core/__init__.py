@@ -6,8 +6,9 @@ feasibility-weighted EHVI acquisition (:mod:`acquisition`), runtime latency
 constraints (:mod:`latency`), anomaly-based recovery measurement
 (:mod:`anomaly`) and the profiling/optimization controller (:mod:`demeter`).
 """
-from .acquisition import (ehvi_2d, expected_improvement, hypervolume_2d,
-                          pareto_front_2d, prob_feasible,
+from .acquisition import (ehvi_2d, ehvi_2d_batch, expected_improvement,
+                          hypervolume_2d, pareto_front_2d,
+                          pareto_front_mask_2d, prob_feasible,
                           select_profiling_batch)
 from .anomaly import MetricDetector, RecoveryTracker
 from .config_space import (ConfigSpace, Parameter, paper_flink_space,
@@ -16,6 +17,7 @@ from .demeter import (DemeterController, DemeterHyperParams, Executor,
                       ModelBank)
 from .forecast import OnlineARIMA, binned_forecast
 from .gp import GP
+from .gp_bank import GPBank, batched_posterior
 from .latency import LatencyConstraint
 from .rgpe import RGPEnsemble, build_rgpe
 from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Observation,
@@ -23,9 +25,10 @@ from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Observation,
 
 __all__ = [
     "ConfigSpace", "Parameter", "paper_flink_space", "tpu_serving_space",
-    "tpu_training_space", "GP", "OnlineARIMA", "binned_forecast",
-    "RGPEnsemble", "build_rgpe", "ehvi_2d", "expected_improvement",
-    "hypervolume_2d", "pareto_front_2d", "prob_feasible",
+    "tpu_training_space", "GP", "GPBank", "batched_posterior", "OnlineARIMA",
+    "binned_forecast", "RGPEnsemble", "build_rgpe", "ehvi_2d",
+    "ehvi_2d_batch", "expected_improvement", "hypervolume_2d",
+    "pareto_front_2d", "pareto_front_mask_2d", "prob_feasible",
     "select_profiling_batch", "LatencyConstraint", "MetricDetector",
     "RecoveryTracker", "DemeterController", "DemeterHyperParams", "Executor",
     "ModelBank", "SegmentStore", "Segment", "Observation", "USAGE", "LATENCY",

@@ -1,21 +1,37 @@
 """Acquisition functions for MOBO (paper §2.2/§2.3).
 
 Profiling candidates are scored by *expected hypervolume improvement weighted
-by the probability of feasibility* over all modeled constraints. The
-bi-objective case (resource usage, latency) admits an **exact** EHVI under
-independent Gaussian marginals via a strip decomposition of the dominated
-region: for a staircase front the improvement factors per strip into a width
-ramp in objective 1 and a height ramp in objective 2, and
+by the probability of feasibility* over all modeled constraints (paper §2.3's
+acquisition: only configurations whose models predict the recovery constraint
+RC satisfied are worth profiling budget). The bi-objective case (resource
+usage, latency — the two objectives of paper §2.2's MOBO formulation) admits
+an **exact** EHVI under independent Gaussian marginals via a strip
+decomposition of the dominated region: for a staircase front the improvement
+factors per strip into a width ramp in objective 1 and a height ramp in
+objective 2, and
 
     E[max(c - z, 0)] = (c - mu) Phi((c - mu)/sigma) + sigma phi((c - mu)/sigma)
 
 closes both integrals. Batch (q-point) selection uses sequential greedy with
 Kriging-believer hallucination.
+
+Two implementations coexist:
+
+* the original NumPy/SciPy functions (:func:`pareto_front_2d`,
+  :func:`ehvi_2d`, :func:`hypervolume_2d`) — the float64 reference oracle;
+* a jitted JAX path (:func:`pareto_front_mask_2d`, :func:`ehvi_2d_batch`)
+  that computes Pareto-front masks and EHVI for a whole *batch* of fronts /
+  candidate grids in one fused dispatch. :func:`select_profiling_batch`
+  routes through it by default; ``tests/test_gp_bank.py`` pins the two
+  paths against each other.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 from scipy import stats
 
@@ -88,6 +104,128 @@ def ehvi_2d(mu: np.ndarray, var: np.ndarray, front: np.ndarray,
     return np.sum(widths * heights_e, axis=1)
 
 
+# ---------------------------------------------------------------------------
+# jitted batched path (Pareto masks + EHVI over candidate grids)
+# ---------------------------------------------------------------------------
+
+def _ramp_expectation_jax(c: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """JAX twin of :func:`_ramp_expectation` (handles c = -inf)."""
+    sigma = jnp.maximum(sigma, 1e-12)
+    neg_inf = jnp.isneginf(c)
+    c_safe = jnp.where(neg_inf, 0.0, c)
+    z = (c_safe - mu) / sigma
+    out = (c_safe - mu) * jax.scipy.stats.norm.cdf(z) \
+        + sigma * jax.scipy.stats.norm.pdf(z)
+    return jnp.where(neg_inf, 0.0, out)
+
+
+def _pareto_mask_one(pts: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask for one padded (k, 2) point set (minimization).
+
+    Matches :func:`pareto_front_2d`: sort by (obj1, obj2), keep a point iff
+    its obj2 strictly undercuts every earlier kept point. Invalid (padding)
+    rows are pushed to the end and never kept.
+    """
+    big = jnp.asarray(np.finfo(np.float32).max / 4)
+    x = jnp.where(valid, pts[:, 0], big)
+    y = jnp.where(valid, pts[:, 1], big)
+    order = jnp.lexsort((y, x))
+    ys = y[order]
+    prev_min = jnp.concatenate([jnp.full((1,), jnp.inf),
+                                jax.lax.cummin(ys)[:-1]])
+    keep_sorted = (ys < prev_min - 1e-15) & valid[order]
+    return jnp.zeros_like(valid).at[order].set(keep_sorted)
+
+
+@partial(jax.jit)
+def _ehvi_kernel(mu: jnp.ndarray, sd: jnp.ndarray, pts: jnp.ndarray,
+                 valid: jnp.ndarray, ref: jnp.ndarray) -> jnp.ndarray:
+    """EHVI of (n, 2) candidates against one padded (k, 2) front."""
+    keep = _pareto_mask_one(pts, valid) \
+        & (pts[:, 0] < ref[0]) & (pts[:, 1] < ref[1])
+    # Park dropped rows at the reference corner: they sort last and span
+    # zero-width strips, leaving the staircase intact.
+    fx = jnp.where(keep, pts[:, 0], ref[0])
+    fy = jnp.where(keep, pts[:, 1], ref[1])
+    order = jnp.argsort(fx)
+    fx, fy = fx[order], fy[order]
+
+    edges = jnp.concatenate([jnp.full((1,), -jnp.inf), fx,
+                             jnp.full((1,), ref[0])])
+    heights = jnp.concatenate([jnp.full((1,), ref[1]), fy])
+    g1_right = _ramp_expectation_jax(
+        jnp.minimum(edges[1:], ref[0])[None, :], mu[:, :1], sd[:, :1])
+    g1_left = _ramp_expectation_jax(edges[:-1][None, :], mu[:, :1],
+                                    sd[:, :1])
+    widths = jnp.maximum(g1_right - g1_left, 0.0)          # (n, strips)
+    heights_e = _ramp_expectation_jax(heights[None, :], mu[:, 1:], sd[:, 1:])
+    return jnp.sum(widths * heights_e, axis=1)
+
+
+_ehvi_kernel_batch = jax.jit(jax.vmap(_ehvi_kernel))
+_pareto_mask_batch = jax.jit(jax.vmap(_pareto_mask_one))
+
+
+def _pad_fronts(fronts: Sequence[np.ndarray]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack variable-length (k_i, 2) fronts into padded points + validity."""
+    from .gp_bank import _bucket  # local import: gp_bank imports nothing here
+    k_max = _bucket(max((len(f) for f in fronts), default=1))
+    b = len(fronts)
+    pts = np.zeros((b, k_max, 2))
+    valid = np.zeros((b, k_max), dtype=bool)
+    for i, f in enumerate(fronts):
+        f = np.asarray(f, np.float64).reshape(-1, 2)
+        pts[i, :len(f)] = f
+        valid[i, :len(f)] = True
+    return pts, valid
+
+
+def pareto_front_mask_2d(points: np.ndarray,
+                         valid: Optional[np.ndarray] = None) -> np.ndarray:
+    """Batched non-dominated masks, one jitted call.
+
+    points: (B, k, 2) minimization objectives; valid: optional (B, k) bool
+    marking real rows (padding excluded). Returns a (B, k) bool mask of the
+    Pareto-optimal subset per batch row — the set equals
+    :func:`pareto_front_2d` row by row.
+    """
+    points = np.asarray(points, np.float64)
+    if valid is None:
+        valid = np.ones(points.shape[:2], dtype=bool)
+    return np.asarray(_pareto_mask_batch(jnp.asarray(points),
+                                         jnp.asarray(valid)))
+
+
+def ehvi_2d_batch(mu: np.ndarray, var: np.ndarray,
+                  fronts: Sequence[np.ndarray],
+                  refs: np.ndarray) -> np.ndarray:
+    """Exact EHVI for B candidate grids against B observed fronts at once.
+
+    mu, var: (B, n, 2) posterior marginals; fronts: sequence of B (k_i, 2)
+    observed point sets (reduced to Pareto subsets internally); refs:
+    (B, 2) reference points. Returns (B, n) — the batched, jitted
+    equivalent of calling :func:`ehvi_2d` per row.
+    """
+    mu = np.asarray(mu, np.float64)
+    var = np.asarray(var, np.float64)
+    sd = np.sqrt(np.maximum(var, 1e-18))
+    pts, valid = _pad_fronts(list(fronts))
+    refs = np.asarray(refs, np.float64).reshape(len(pts), 2)
+    return np.asarray(_ehvi_kernel_batch(
+        jnp.asarray(mu), jnp.asarray(sd), jnp.asarray(pts),
+        jnp.asarray(valid), jnp.asarray(refs)))
+
+
+def _ehvi_dispatch(mu: np.ndarray, var: np.ndarray, front: np.ndarray,
+                   ref: Tuple[float, float], backend: str) -> np.ndarray:
+    if backend == "jax":
+        return ehvi_2d_batch(mu[None], var[None], [front],
+                             np.asarray(ref)[None])[0]
+    return ehvi_2d(mu, var, front, ref)
+
+
 def expected_improvement(mu: np.ndarray, var: np.ndarray, best: float
                          ) -> np.ndarray:
     """Single-objective EI for minimization."""
@@ -113,22 +251,32 @@ def select_profiling_batch(
         recovery_constraint: Optional[float] = None,
         exclude: Sequence[int] = (),
         bias: Optional[np.ndarray] = None,
+        backend: str = "jax",
 ) -> List[int]:
     """Greedy q-batch maximizing feasibility-weighted EHVI (paper §2.3).
 
     ``bias`` multiplies the acquisition — the domain-knowledge preference of
     §2.3 (prefer larger configs after a revert, smaller after a downscale).
     Returns indices into ``candidates``.
+
+    ``backend="jax"`` (default) scores the candidate grid through the jitted
+    :func:`ehvi_2d_batch` kernel; ``"numpy"`` keeps the float64 scipy oracle.
     """
     mu, var = post_objectives(candidates)
-    score = ehvi_2d(mu, var, observed_front, ref)
+    # Feasibility / bias multipliers are front-independent: compute once and
+    # reuse across greedy rounds (keeps every EHVI call full-grid so the
+    # jitted kernel sees one stable candidate shape).
+    mult = np.ones(len(mu))
     if post_recovery is not None and recovery_constraint is not None:
         rmu, rvar = post_recovery(candidates)
-        score = score * prob_feasible(rmu, rvar, recovery_constraint)
+        mult = mult * prob_feasible(rmu, rvar, recovery_constraint)
     if bias is not None:
-        score = score * bias
-    score = np.asarray(score, np.float64).copy()
-    score[list(exclude)] = -np.inf
+        mult = mult * bias
+    score = np.asarray(_ehvi_dispatch(mu, var, observed_front, ref, backend),
+                       np.float64) * mult
+    dead = np.zeros(len(score), dtype=bool)
+    dead[list(exclude)] = True
+    score[dead] = -np.inf
 
     picked: List[int] = []
     front = np.asarray(observed_front, np.float64).reshape(-1, 2).copy()
@@ -137,17 +285,13 @@ def select_profiling_batch(
         if not np.isfinite(score[j]) or score[j] <= 0:
             break
         picked.append(j)
-        score[j] = -np.inf
+        dead[j] = True
         # Kriging believer: hallucinate the candidate at its posterior mean
         # and re-score the remainder against the augmented front.
         front = np.vstack([front, mu[j]]) if len(front) else mu[j:j + 1]
-        live = np.isfinite(score)
-        if np.any(live):
-            upd = ehvi_2d(mu[live], var[live], front, ref)
-            if post_recovery is not None and recovery_constraint is not None:
-                rmu, rvar = post_recovery(candidates[live])
-                upd = upd * prob_feasible(rmu, rvar, recovery_constraint)
-            if bias is not None:
-                upd = upd * bias[live]
-            score[live] = upd
+        if dead.all():
+            break
+        score = np.asarray(_ehvi_dispatch(mu, var, front, ref, backend),
+                           np.float64) * mult
+        score[dead] = -np.inf
     return picked

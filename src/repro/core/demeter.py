@@ -17,8 +17,10 @@ the TPU serving/training engines for the framework integration):
 """
 from __future__ import annotations
 
+import time
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Protocol, Tuple
+from typing import Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -26,9 +28,11 @@ from .acquisition import ehvi_2d, pareto_front_2d, select_profiling_batch
 from .config_space import ConfigSpace
 from .forecast import OnlineARIMA, binned_forecast
 from .gp import GP
+from .gp_bank import GPBank
 from .latency import LatencyConstraint
 from .rgpe import RGPEnsemble, build_rgpe
-from .segments import LATENCY, RECOVERY, USAGE, Segment, SegmentStore
+from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Segment,
+                       SegmentStore)
 
 
 class Executor(Protocol):
@@ -76,35 +80,163 @@ class DemeterHyperParams:
                                           # small relative to the front's HV
 
 
+def _metric_salt(metric: str) -> int:
+    """Stable per-metric seed offset (``hash(str)`` is randomized per
+    process; fits must be reproducible across runs)."""
+    try:
+        return METRICS.index(metric) * 331
+    except ValueError:
+        return zlib.crc32(metric.encode()) % 997
+
+
+#: Optimizer budget shared by both fit backends (restarts, L-BFGS iters).
+FIT_RESTARTS = 2
+FIT_MAX_ITER = 60
+
+
 @dataclass
 class ModelBank:
-    """Per-(segment, metric) GPs + RGPE ensembles with dirty-tracking."""
+    """Per-(segment, metric) GPs + RGPE ensembles with dirty-tracking.
+
+    Two fit backends share one staleness policy and identical restart
+    initializations:
+
+    * ``"bank"`` (default) — all stale models are packed into a
+      :class:`~repro.core.gp_bank.GPBank` and fitted in a single vmapped,
+      jitted L-BFGS batch; :meth:`refresh` (one controller) and
+      :meth:`batch_refresh` (a whole sweep of controllers) fold every
+      pending refit into one dispatch.
+    * ``"scalar"`` — the original per-GP scipy L-BFGS-B loop
+      (:meth:`repro.core.gp.GP.fit`), kept as the reference oracle.
+
+    ``fit_wall_s`` / ``n_fits`` accumulate the wall-clock cost of fits this
+    bank triggered *lazily* (via :meth:`gp`); batched refreshes report their
+    shared wall time through their return value instead, so sweeps can
+    account model-update cost without double counting.
+    """
 
     store: SegmentStore
     min_fit: int = 3
     max_base_models: int = 4
     refit_growth: float = 0.10           # refit when data grew >= 10 %
-    _gps: Dict[Tuple[int, str], Tuple[int, Optional[GP]]] = field(
-        default_factory=dict)
+    fit_backend: str = "bank"            # "bank" | "scalar"
+    fit_wall_s: float = 0.0
+    n_fits: int = 0
+    _gps: Dict[Tuple[int, str], Tuple[int, int, Optional[GP]]] = field(
+        default_factory=dict)            # key -> (version, n_fit, gp)
 
-    def gp(self, segment: Segment, metric: str) -> Optional[GP]:
+    def __post_init__(self) -> None:
+        if self.fit_backend not in ("bank", "scalar"):
+            raise ValueError(f"unknown fit backend {self.fit_backend!r}; "
+                             f"available: ('bank', 'scalar')")
+
+    # -- staleness policy ---------------------------------------------------
+    def _plan(self, segment: Segment, metric: str):
+        """Decide ('cached', gp) | ('fit', (x, y)) | ('empty', None)."""
         key = (segment.index, metric)
-        x, y = segment.data(metric)
         cached = self._gps.get(key)
+        if cached is not None and cached[0] == segment.version:
+            return "cached", cached[2]
+        x, y = segment.data(metric)
         if cached is not None:
-            n_fit = cached[0]
+            n_fit = cached[1]
             fresh_enough = (len(y) == n_fit
-                            or (cached[1] is not None
+                            or (cached[2] is not None
                                 and len(y) < n_fit * (1 + self.refit_growth)))
             if fresh_enough:
-                return cached[1]
-        gp = None
+                self._gps[key] = (segment.version, n_fit, cached[2])
+                return "cached", cached[2]
         if len(y) >= self.min_fit and np.ptp(y) > 0:
-            gp = GP.fit(x, y, restarts=2, max_iter=60,
-                        seed=segment.index * 131 + hash(metric) % 997)
-        self._gps[key] = (len(y), gp)
-        return gp
+            return "fit", (x, y)
+        self._gps[key] = (segment.version, len(y), None)
+        return "empty", None
 
+    def _seed(self, segment: Segment, metric: str) -> int:
+        return segment.index * 131 + _metric_salt(metric)
+
+    def _install(self, segment: Segment, metric: str, n: int,
+                 gp: Optional[GP]) -> None:
+        self._gps[(segment.index, metric)] = (segment.version, n, gp)
+
+    # -- fitting ------------------------------------------------------------
+    def gp(self, segment: Segment, metric: str) -> Optional[GP]:
+        """The (possibly cached) GP for one (segment, metric); lazy fit."""
+        action, payload = self._plan(segment, metric)
+        if action != "fit":
+            return payload
+        x, y = payload
+        t0 = time.perf_counter()
+        if self.fit_backend == "scalar":
+            g = GP.fit(x, y, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
+                       seed=self._seed(segment, metric))
+        else:
+            g = GPBank.fit([(x, y)], restarts=FIT_RESTARTS,
+                           max_iter=FIT_MAX_ITER,
+                           seeds=[self._seed(segment, metric)]).member(0)
+        self.fit_wall_s += time.perf_counter() - t0
+        self.n_fits += 1
+        self._install(segment, metric, len(y), g)
+        return g
+
+    def stale_fits(self) -> List[Tuple[Segment, str, Tuple]]:
+        """All (segment, metric, (x, y)) pairs whose model needs a refit.
+
+        Deliberately covers the *whole* store, not just the current
+        segment: every fitted segment is a base-model candidate for
+        RGPE's nearest-first transfer walk (:meth:`ensemble` may reach any
+        of them when closer segments lack models), the segment count is
+        bounded by rate-range / SS, and keeping the scope identical for
+        both fit backends keeps model-update cost comparisons
+        apples-to-apples.
+        """
+        out = []
+        for _, seg in sorted(self.store.segments.items()):
+            for metric in METRICS:
+                action, payload = self._plan(seg, metric)
+                if action == "fit":
+                    out.append((seg, metric, payload))
+        return out
+
+    def refresh(self) -> int:
+        """Refit every stale (segment, metric) model in one batched fit."""
+        n, _wall = ModelBank.batch_refresh([self])
+        return n
+
+    @staticmethod
+    def batch_refresh(banks: Sequence["ModelBank"]) -> Tuple[int, float]:
+        """One model-update step for many controllers.
+
+        Collects every stale (segment, metric) dataset across ``banks`` and
+        fits them all in a single :class:`GPBank` batch (scalar-backend
+        banks fall back to their per-GP loop). Returns
+        ``(n_models_fitted, wall_seconds)``.
+        """
+        t0 = time.perf_counter()
+        jobs = []                      # (bank, segment, metric, x, y)
+        for bank in banks:
+            for seg, metric, (x, y) in bank.stale_fits():
+                jobs.append((bank, seg, metric, x, y))
+        if not jobs:
+            return 0, time.perf_counter() - t0
+
+        batched = [j for j in jobs if j[0].fit_backend == "bank"]
+        if batched:
+            gbank = GPBank.fit(
+                [(x, y) for _, _, _, x, y in batched],
+                restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
+                seeds=[b._seed(seg, metric)
+                       for b, seg, metric, _, _ in batched])
+            for i, (b, seg, metric, _x, y) in enumerate(batched):
+                b._install(seg, metric, len(y), gbank.member(i))
+        for b, seg, metric, x, y in jobs:
+            if b.fit_backend == "scalar":
+                g = GP.fit(x, y, restarts=FIT_RESTARTS,
+                           max_iter=FIT_MAX_ITER,
+                           seed=b._seed(seg, metric))
+                b._install(seg, metric, len(y), g)
+        return len(jobs), time.perf_counter() - t0
+
+    # -- ensembles ----------------------------------------------------------
     def ensemble(self, segment: Segment, metric: str) -> Optional[RGPEnsemble]:
         target_gp = self.gp(segment, metric)
         tx, ty = segment.data(metric)
@@ -119,7 +251,7 @@ class ModelBank:
             if len(base) >= self.max_base_models:
                 break
         return build_rgpe(target_gp, tx, ty, base,
-                          seed=segment.index * 7919 + hash(metric) % 997)
+                          seed=segment.index * 7919 + _metric_salt(metric))
 
 
 @dataclass
@@ -131,6 +263,9 @@ class DemeterController:
     hp: DemeterHyperParams = field(default_factory=DemeterHyperParams)
     tsf: OnlineARIMA = field(default_factory=lambda: OnlineARIMA(p=8, d=1))
     lc: LatencyConstraint = field(default_factory=LatencyConstraint)
+    #: GP fitting backend: "bank" = batched jitted L-BFGS (GPBank),
+    #: "scalar" = per-GP scipy reference oracle.
+    fit_backend: str = "bank"
     store: SegmentStore = field(init=False)
     bank: ModelBank = field(init=False)
     #: event log for experiments: (kind, payload) tuples
@@ -140,7 +275,7 @@ class DemeterController:
 
     def __post_init__(self) -> None:
         self.store = SegmentStore(self.hp.segment_size)
-        self.bank = ModelBank(self.store)
+        self.bank = ModelBank(self.store, fit_backend=self.fit_backend)
         self._candidates = self.space.matrix()
         self._configs = self.space.enumerate()
         self._alloc = np.asarray(

@@ -1,10 +1,19 @@
 """Exact Gaussian-process regression (the unit model behind MOBO, paper §2.2).
 
-One GP per objective/constraint. Matérn-5/2 kernel with ARD lengthscales;
-hyper-parameters fitted by multi-restart L-BFGS-B on the marginal log
-likelihood (scipy driving a jax value-and-grad). Inputs live in the unit
-hypercube (see :mod:`repro.core.config_space`); targets are standardized
-internally so priors are scale-free.
+One GP per (segment, objective/constraint). Matérn-5/2 kernel with ARD
+lengthscales; inputs live in the unit hypercube (see
+:mod:`repro.core.config_space`); targets are standardized internally so the
+weak log-normal hyper-priors are scale-free.
+
+This module is the **scalar reference oracle**: :meth:`GP.fit` optimizes the
+marginal log likelihood with multi-restart scipy L-BFGS-B driving a jax
+value-and-grad, one model at a time. The production hot path is
+:mod:`repro.core.gp_bank`, which fits whole segment x objective x scenario
+batches of these GPs in a single vmapped, jitted L-BFGS dispatch from the
+same restart initializations and the same objective — the two paths are
+pinned against each other in ``tests/test_gp_bank.py``. The kernel,
+hyper-parameter packing (``theta`` = d log-lengthscales, log signal, log
+noise) and priors below are shared by both.
 """
 from __future__ import annotations
 
@@ -61,9 +70,34 @@ def _neg_mll(theta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
 _neg_mll_grad = jax.value_and_grad(_neg_mll)
 
 
+def restart_inits(dim: int, restarts: int, seed: int) -> np.ndarray:
+    """Multi-restart starting points for the log hyper-parameters, (R, d+2).
+
+    Single source of truth for both optimizers: the scalar scipy path below
+    and the batched path (:meth:`repro.core.gp_bank.GPBank.fit`) must draw
+    identical initializations for their fits to agree.
+    """
+    rng = np.random.default_rng(seed)
+    t0s = np.empty((max(restarts, 1), dim + 2))
+    for r in range(max(restarts, 1)):
+        t0s[r] = np.concatenate([
+            np.log(rng.uniform(0.2, 1.0, dim)),
+            [np.log(rng.uniform(0.5, 2.0))],
+            [np.log(rng.uniform(1e-3, 1e-1))],
+        ])
+    return t0s
+
+
 @dataclass
 class GP:
-    """A fitted exact GP. Construct via :meth:`GP.fit`."""
+    """A fitted exact GP.
+
+    Construct via :meth:`GP.fit` (scalar scipy path) or slice one out of a
+    fitted :class:`~repro.core.gp_bank.GPBank` with
+    :meth:`~repro.core.gp_bank.GPBank.member`; both produce this same
+    dataclass, so downstream consumers (RGPE, the controller) never care
+    which optimizer fitted the model.
+    """
 
     x: np.ndarray            # (n, d) unit-cube inputs
     y_mean: float
@@ -89,14 +123,8 @@ class GP:
             v, g = _neg_mll_grad(jnp.asarray(t64), xj, yj)
             return float(v), np.asarray(g, np.float64)
 
-        rng = np.random.default_rng(seed)
         best_v, best_t = np.inf, None
-        for r in range(max(restarts, 1)):
-            t0 = np.concatenate([
-                np.log(rng.uniform(0.2, 1.0, dim)),
-                [np.log(rng.uniform(0.5, 2.0))],
-                [np.log(rng.uniform(1e-3, 1e-1))],
-            ])
+        for t0 in restart_inits(dim, restarts, seed):
             res = sopt.minimize(objective, t0, jac=True, method="L-BFGS-B",
                                 options={"maxiter": max_iter})
             if res.fun < best_v and np.isfinite(res.fun):

@@ -1,16 +1,27 @@
 """Rank-weighted Gaussian Process Ensembles (paper §2.2, eq. 1).
 
-RGPE (Feurer et al.) transfers knowledge across workload segments: base GPs
+Demeter trains one MOBO model per workload segment, but a fresh segment has
+almost no observations — §2.2's answer is RGPE (Feurer et al.): base GPs
 trained on *other* segments are combined with the target segment's GP,
 
     m_tar(x) ~ N( Σ_i a_i μ_i(x) ,  Σ_i a_i² σ_i²(x) ),
 
 where the weights ``a_i`` come from a pairwise ranking loss evaluated on the
-target segment's observations — base models that rank the target's
-configurations well get weight; the target model itself is scored with
-leave-one-out posterior samples to avoid optimistic bias. Weight dilution is
-prevented by discarding base models whose sampled loss exceeds the target
-model's 95th-percentile loss (Feurer et al., §4.2).
+target segment's observations. A base model earns weight in proportion to
+the fraction of posterior samples in which it misranks the target segment's
+configurations *least* — ranking (not regression error) because the
+optimizer only consumes the ordering of configurations, and it is invariant
+to the level shifts that dominate between workload segments. The target
+model itself is scored with leave-one-out posterior samples to avoid
+optimistic bias, and weight dilution is prevented by discarding base models
+whose sampled loss exceeds the target model's 95th-percentile loss (Feurer
+et al., §4.2).
+
+Posterior evaluation is batched: with more than one active member the
+ensemble packs every member GP into stacked arrays and predicts all of them
+in a single jitted call (:func:`repro.core.gp_bank.batched_posterior`), so
+the controller's full-candidate-grid queries cost one XLA dispatch per
+metric instead of one per member.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .gp import GP
+from .gp_bank import batched_posterior
 
 
 def _ranking_loss(pred: np.ndarray, target: np.ndarray) -> np.ndarray:
@@ -41,15 +53,17 @@ class RGPEnsemble:
 
     def posterior(self, xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         xq = np.atleast_2d(np.asarray(xq, np.float64))
-        mean = np.zeros(len(xq))
-        var = np.zeros(len(xq))
-        for gp, a in zip(self.gps, self.weights):
-            if a <= 0.0:
-                continue
+        active = [(gp, a) for gp, a in zip(self.gps, self.weights) if a > 0.0]
+        if not active:
+            return np.zeros(len(xq)), np.full(len(xq), 1e-12)
+        if len(active) == 1:
+            gp, a = active[0]
             m, v = gp.posterior(xq)
-            mean += a * m
-            var += (a * a) * v
-        return mean, np.maximum(var, 1e-12)
+            return a * m, np.maximum((a * a) * v, 1e-12)
+        # All members in one jitted dispatch, then the paper's mixture rule.
+        mus, vars_ = batched_posterior([gp for gp, _ in active], xq)
+        w = np.asarray([a for _, a in active])
+        return w @ mus, np.maximum((w * w) @ vars_, 1e-12)
 
     @property
     def n_members(self) -> int:

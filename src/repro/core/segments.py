@@ -39,9 +39,14 @@ class Segment:
     observations: List[Observation] = field(default_factory=list)
     #: Profiling-annealing state: exploration shrinks with knowledge (§2.3).
     profile_rounds: int = 0
+    #: Monotonic data version, bumped on every add — model caches
+    #: (:class:`~repro.core.demeter.ModelBank`) use it as a cheap staleness
+    #: check without re-materializing (X, y) arrays.
+    version: int = 0
 
     def add(self, obs: Observation) -> None:
         self.observations.append(obs)
+        self.version += 1
 
     def data(self, metric: str):
         """(X, y) arrays for one metric over this segment's observations."""

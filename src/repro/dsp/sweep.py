@@ -11,6 +11,12 @@ x seed x failure schedule — as a single vectorized run:
 * per-controller decision logic runs per decision/optimization interval
   (every ``decision_interval_s`` for the baselines, the paper's metric /
   profiling / optimization cadences for Demeter), never per simulation step;
+* Demeter model updates are batched across the grid: before any due
+  controller acts, every stale (segment, metric) GP of every due scenario
+  is refitted in one :class:`~repro.core.gp_bank.GPBank` dispatch
+  (:meth:`~repro.core.demeter.ModelBank.batch_refresh`), so the whole
+  ScenarioSpec grid shares a single jitted model-update step per
+  optimization interval;
 * the scalar path (one :class:`~repro.dsp.simulator.SimJob` per scenario)
   is kept as a reference oracle: ``run_sweep(..., engine="scalar")`` drives
   the *same* orchestration through the scalar simulator, and the two engines
@@ -28,7 +34,7 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ..core.config_space import paper_flink_space
-from ..core.demeter import DemeterController, DemeterHyperParams
+from ..core.demeter import DemeterController, DemeterHyperParams, ModelBank
 from .baselines import make_baseline
 from .executor import (allocated_cost, observe_digest, profile_one,
                        ProfileCost)
@@ -170,6 +176,10 @@ class SweepResult:
     scenarios: List[ScenarioResult]
     wall_s: float
     n_steps: int
+    #: wall-clock spent fitting GP models (shared batched refreshes plus any
+    #: lazy per-controller fits) and how many models were fitted
+    model_update_wall_s: float = 0.0
+    n_model_fits: int = 0
 
     def by_name(self) -> Dict[str, ScenarioResult]:
         return {s.name: s for s in self.scenarios}
@@ -177,6 +187,8 @@ class SweepResult:
     def to_json(self) -> Dict[str, object]:
         return {"engine": self.engine, "wall_s": self.wall_s,
                 "n_steps": self.n_steps,
+                "model_update_wall_s": self.model_update_wall_s,
+                "n_model_fits": self.n_model_fits,
                 "scenarios": [s.summary() for s in self.scenarios]}
 
 
@@ -332,11 +344,13 @@ class _DemeterPolicy:
     """Demeter's two processes at the paper cadences (§3.2)."""
 
     def __init__(self, eng: "SweepEngine", idx: int, seed: int,
-                 hp: Optional[DemeterHyperParams]):
+                 hp: Optional[DemeterHyperParams],
+                 fit_backend: str = "bank"):
         self.view = _ScenarioView(eng, idx, seed)
         self.start_config = self.view.cmax
         self.ctl = DemeterController(paper_flink_space(), self.view,
-                                     hp=hp or DemeterHyperParams())
+                                     hp=hp or DemeterHyperParams(),
+                                     fit_backend=fit_backend)
         self._next_ingest = METRIC_WINDOW_S
         self._next_opt = OPT_INTERVAL_S
         # async offset between the two processes (mirrors runner.py)
@@ -374,7 +388,8 @@ class SweepEngine:
                  model: Optional[ClusterModel] = None,
                  hp: Optional[DemeterHyperParams] = None,
                  decision_interval_s: float = 60.0,
-                 recovery_cap_s: float = RECOVERY_CAP_S):
+                 recovery_cap_s: float = RECOVERY_CAP_S,
+                 fit_backend: str = "bank"):
         if not specs:
             raise ValueError("empty scenario grid")
         dts = {s.trace.dt_s for s in specs}
@@ -385,6 +400,7 @@ class SweepEngine:
         self.hp = hp
         self.decision_interval_s = decision_interval_s
         self.recovery_cap_s = recovery_cap_s
+        self.fit_backend = fit_backend
         self.dt = float(specs[0].trace.dt_s)
 
         S = len(self.specs)
@@ -437,9 +453,14 @@ class SweepEngine:
         self.backend = None
         for j, spec in enumerate(self.specs):
             if spec.controller == "demeter":
-                policies.append(_DemeterPolicy(self, j, spec.seed, self.hp))
+                policies.append(_DemeterPolicy(self, j, spec.seed, self.hp,
+                                               fit_backend=self.fit_backend))
             else:
                 policies.append(_BaselinePolicy(spec.controller))
+        demeter_banks = {j: p.ctl.bank for j, p in enumerate(policies)
+                         if isinstance(p, _DemeterPolicy)}
+        model_update_wall = 0.0
+        n_model_fits = 0
         configs = [p.start_config for p in policies]
         self.backend = backend_cls(self.model, configs, seeds)
         self.reconf_count = np.zeros(S, dtype=int)
@@ -511,9 +532,23 @@ class SweepEngine:
             if active is not None:
                 pol_due &= active
             if pol_due.any():
-                for j in np.nonzero(pol_due)[0]:
+                due = np.nonzero(pol_due)[0]
+                # One shared batched model-update for every Demeter
+                # controller due this tick: all stale (segment, metric) GPs
+                # across the whole grid are refitted in a single GPBank
+                # dispatch before any controller acts.
+                banks = [demeter_banks[j] for j in due if j in demeter_banks]
+                if banks:
+                    n_fit, fit_wall = ModelBank.batch_refresh(banks)
+                    model_update_wall += fit_wall
+                    n_model_fits += n_fit
+                for j in due:
                     policy_next[j] = policies[j].act(self, j, t, i)
         wall = time.perf_counter() - t0
+        # Fold in lazy fits (segments first hit mid-act, cold starts).
+        for bank in demeter_banks.values():
+            model_update_wall += bank.fit_wall_s
+            n_model_fits += bank.n_fits
 
         results = []
         for j, spec in enumerate(self.specs):
@@ -537,17 +572,24 @@ class SweepEngine:
                 profile_cpu_s=cost.cpu_s, profile_mem_mb_s=cost.mem_mb_s,
             ))
         return SweepResult(engine=engine, scenarios=results, wall_s=wall,
-                           n_steps=self.n_steps)
+                           n_steps=self.n_steps,
+                           model_update_wall_s=model_update_wall,
+                           n_model_fits=n_model_fits)
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], *,
               engine: str = "batched",
               model: Optional[ClusterModel] = None,
               hp: Optional[DemeterHyperParams] = None,
-              decision_interval_s: float = 60.0) -> SweepResult:
+              decision_interval_s: float = 60.0,
+              fit_backend: str = "bank") -> SweepResult:
     """Execute a scenario grid in one invocation.
 
     ``engine="batched"`` is the vectorized hot path; ``engine="scalar"`` is
-    the per-scenario SimJob reference oracle (identical orchestration)."""
+    the per-scenario SimJob reference oracle (identical orchestration).
+    ``fit_backend`` selects the Demeter GP fitting path: ``"bank"`` shares
+    one batched jitted model-update across all Demeter scenarios per
+    optimization interval, ``"scalar"`` is the per-GP scipy oracle."""
     return SweepEngine(specs, model=model, hp=hp,
-                       decision_interval_s=decision_interval_s).run(engine)
+                       decision_interval_s=decision_interval_s,
+                       fit_backend=fit_backend).run(engine)

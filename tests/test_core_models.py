@@ -124,8 +124,9 @@ class TestRGPE:
         mu, var = ens.posterior(xq)
         m1, v1 = g1.posterior(xq)
         m2, v2 = g2.posterior(xq)
-        np.testing.assert_allclose(mu, 0.5 * m1 + 0.5 * m2, rtol=1e-6)
-        np.testing.assert_allclose(var, 0.25 * v1 + 0.25 * v2, rtol=1e-6)
+        # members evaluate through the batched float32 kernel; allow f32 noise
+        np.testing.assert_allclose(mu, 0.5 * m1 + 0.5 * m2, rtol=1e-5)
+        np.testing.assert_allclose(var, 0.25 * v1 + 0.25 * v2, rtol=1e-5)
 
 
 class TestLatencyConstraint:

@@ -1,0 +1,23 @@
+"""Documentation integrity: local links resolve, fenced examples run.
+
+Keeps ``docs/`` honest in the default test matrix; CI runs the same script
+in a dedicated docs job.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_links_and_examples():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, \
+        f"docs check failed:\n{proc.stdout}\n{proc.stderr}"
+
+
+def test_expected_docs_exist():
+    assert (REPO / "docs" / "ARCHITECTURE.md").exists()
+    assert (REPO / "docs" / "SWEEP.md").exists()
