@@ -17,10 +17,12 @@ import json
 import os
 import pickle
 import time
+from dataclasses import replace
 from typing import Dict, List
 
 import numpy as np
 
+from repro.core import FORECASTER_KINDS
 from repro.dsp import (PeriodicFailures, RunResult, run_experiment, run_sweep,
                        scenario_grid, make_trace, tsw_like, ysb_like,
                        TRACE_GENERATORS)
@@ -138,21 +140,32 @@ def sweep_main(args: argparse.Namespace) -> None:
     failures = PeriodicFailures(args.failure_interval_m * 60.0)
     specs = scenario_grid(traces, args.controllers, args.seeds,
                           failures=failures)
+    if args.forecasters != ["arima"]:
+        # per-scenario forecaster choice: cycle the requested kinds
+        specs = [replace(s, forecaster=args.forecasters[i %
+                                                        len(args.forecasters)])
+                 for i, s in enumerate(specs)]
     print(f"# sweep: {len(specs)} scenarios "
           f"({len(traces)} traces x {len(args.controllers)} controllers "
           f"x {len(args.seeds)} seeds), {args.duration_h:g}h @ dt={args.dt:g}s")
 
-    batched = run_sweep(specs, engine="batched", fit_backend=args.fit_backend)
+    batched = run_sweep(specs, engine="batched", fit_backend=args.fit_backend,
+                        forecast_backend=args.forecast_backend)
     print(f"# batched engine: {batched.wall_s:.2f}s wall "
           f"({batched.n_steps} steps x {len(specs)} scenarios)")
     if batched.n_model_fits:
         print(f"# model updates ({args.fit_backend}): "
               f"{batched.n_model_fits} GP fits, "
               f"{batched.model_update_wall_s:.2f}s wall")
+    if batched.n_forecast_updates:
+        print(f"# forecast updates ({args.forecast_backend}): "
+              f"{batched.n_forecast_updates} stream-updates, "
+              f"{batched.forecast_update_wall_s:.3f}s TSF wall")
 
     if args.compare_scalar:
         scalar = run_sweep(specs, engine="scalar",
-                           fit_backend=args.fit_backend)
+                           fit_backend=args.fit_backend,
+                           forecast_backend=args.forecast_backend)
         mismatched = [a.name for a, b in
                       zip(batched.scenarios, scalar.scenarios)
                       if not a.allclose(b)]
@@ -213,6 +226,13 @@ def main() -> None:
                     default="bank",
                     help="Demeter GP fitting path: batched jitted GPBank "
                          "(default) or the per-GP scipy reference oracle")
+    sw.add_argument("--forecast-backend", choices=("bank", "scalar"),
+                    default="bank",
+                    help="Demeter TSF path: shared batched ForecastBank "
+                         "(default) or per-scenario NumPy reference oracle")
+    sw.add_argument("--forecasters", type=_csv, default=["arima"],
+                    help=f"forecaster kinds ({','.join(FORECASTER_KINDS)}), "
+                         "cycled across scenarios")
     sw.set_defaults(func=sweep_main)
 
     pp = sub.add_parser("paper", help="paper-protocol cells (Table 3 etc.)")

@@ -1,0 +1,243 @@
+"""Batched-vs-scalar benchmarks for the forecasting + anomaly subsystem.
+
+Three reports:
+
+* ``micro`` — B parallel forecaster streams driven for T ticks at the
+  sweep's read cadence (forecasts consumed every ``--read-every`` ticks):
+  per-sample scalar NumPy updates vs one ForecastBank chunked flush per
+  read, plus batched-vs-loop multistep rollout and DetectorBank-vs-scalar
+  anomaly detection timings.
+* ``sweep`` — a >=16-scenario all-Demeter grid through the sweep engine
+  with ``forecast_backend="bank"`` and ``"scalar"``, comparing the
+  accumulated TSF wall-clock (``SweepResult.forecast_update_wall_s`` —
+  telemetry updates + rollout reads, the number the proactive loop
+  actually pays). A short warmup sweep is run first so the bank numbers
+  are steady-state, not jit-compile time (mirrors gp_bench).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/forecast_bench.py micro
+    PYTHONPATH=src python benchmarks/forecast_bench.py sweep --scenarios 16
+    PYTHONPATH=src python benchmarks/forecast_bench.py all \\
+        --json results/forecast_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (DetectorBank, DemeterHyperParams, ForecastBank,
+                        MetricDetector, OnlineARIMA)
+from repro.dsp import ScenarioSpec, make_trace, run_sweep
+
+
+# ---------------------------------------------------------------------------
+# micro: raw update / rollout / detector dispatch cost
+# ---------------------------------------------------------------------------
+def micro_updates(B: int, T: int, read_every: int) -> Dict[str, float]:
+    """B streams x T ticks; forecasts are consumed every ``read_every``
+    ticks (the sweep's optimization-interval cadence)."""
+    rng = np.random.default_rng(0)
+    values = 50_000 + 5_000 * np.sin(np.arange(T) / 40) \
+        + rng.normal(0, 300, T)
+
+    bank = ForecastBank(["arima"] * B, horizon=10)
+    views = bank.views()
+    for t in range(4 * read_every):            # warm the jit caches
+        for v in views:
+            v.update(float(values[t]))
+        if (t + 1) % read_every == 0:
+            bank.flush()
+    bank.update_wall_s = 0.0
+    t0 = time.perf_counter()
+    for t in range(T):
+        x = float(values[t])
+        for v in views:
+            v.update(x)
+        if (t + 1) % read_every == 0:
+            bank.flush()
+    bank.flush()
+    bank_s = time.perf_counter() - t0
+
+    scalars = [OnlineARIMA(p=8, d=1) for _ in range(B)]
+    t0 = time.perf_counter()
+    for t in range(T):
+        x = float(values[t])
+        for m in scalars:
+            m.update(x)
+    scalar_s = time.perf_counter() - t0
+
+    out = {"B": B, "T": T, "read_every": read_every,
+           "scalar_update_s": scalar_s, "bank_update_s": bank_s,
+           "update_speedup": scalar_s / max(bank_s, 1e-9)}
+    print(f"update    {B}x{T:<6d} scalar {scalar_s*1e3:8.1f}ms   "
+          f"bank {bank_s*1e3:8.1f}ms   speedup "
+          f"{out['update_speedup']:6.1f}x")
+
+    # rollout: B iterated multistep forecasts, loop vs one batched scan
+    _ = [v.forecast(10) for v in views]        # warm rollout cache path
+    t0 = time.perf_counter()
+    for _ in range(50):
+        for m in scalars:
+            m.forecast(10)
+    roll_scalar = (time.perf_counter() - t0) / 50
+    t0 = time.perf_counter()
+    for _ in range(50):
+        bank._cache.clear()                    # force a fresh batched scan
+        for v in views:
+            v.forecast(10)
+    roll_bank = (time.perf_counter() - t0) / 50
+    out.update(scalar_rollout_s=roll_scalar, bank_rollout_s=roll_bank,
+               rollout_speedup=roll_scalar / max(roll_bank, 1e-9))
+    print(f"rollout   {B}x10     scalar {roll_scalar*1e3:8.2f}ms   "
+          f"bank {roll_bank*1e3:8.2f}ms   speedup "
+          f"{out['rollout_speedup']:6.1f}x")
+    return out
+
+
+def micro_detector(B: int, T: int) -> Dict[str, float]:
+    rng = np.random.default_rng(1)
+    healthy = 50_000 + rng.normal(0, 200, (T, B))
+    healthy[T // 2:T // 2 + 20] = 0.0          # one outage window
+
+    det_b = DetectorBank(B)
+    for t in range(30):                        # warm
+        det_b.observe(healthy[t])
+    det_b = DetectorBank(B)
+    t0 = time.perf_counter()
+    for t in range(T):
+        det_b.observe(healthy[t])
+    bank_s = time.perf_counter() - t0
+
+    dets = [MetricDetector(str(i)) for i in range(B)]
+    t0 = time.perf_counter()
+    for t in range(T):
+        for i, d in enumerate(dets):
+            d.observe(healthy[t, i])
+    scalar_s = time.perf_counter() - t0
+
+    out = {"B": B, "T": T, "scalar_detector_s": scalar_s,
+           "bank_detector_s": bank_s,
+           "detector_speedup": scalar_s / max(bank_s, 1e-9)}
+    print(f"detector  {B}x{T:<6d} scalar {scalar_s*1e3:8.1f}ms   "
+          f"bank {bank_s*1e3:8.1f}ms   speedup "
+          f"{out['detector_speedup']:6.1f}x")
+    return out
+
+
+def micro_main(args: argparse.Namespace) -> Dict[str, object]:
+    print("== micro: per-tick stream updates, scalar loop vs ForecastBank ==")
+    upd = micro_updates(args.streams, args.ticks, args.read_every)
+    print("== micro: anomaly detectors, scalar loop vs DetectorBank ==")
+    det = micro_detector(args.streams, min(args.ticks, 400))
+    return {"updates": upd, "detector": det}
+
+
+# ---------------------------------------------------------------------------
+# sweep: TSF wall across a >=16-scenario Demeter grid
+# ---------------------------------------------------------------------------
+def sweep_specs(n: int, duration_h: float, dt: float, seeds):
+    kinds = ("diurnal", "flash", "regime", "sindrift")
+    n_traces = max(1, n // max(len(seeds), 1))
+    traces = [make_trace(kinds[i % len(kinds)],
+                         duration_s=duration_h * 3600.0, dt_s=dt, seed=i)
+              for i in range(n_traces)]
+    return [ScenarioSpec(trace=t, controller="demeter", seed=s)
+            for t in traces for s in seeds]
+
+
+def _warm_bank_shapes(B: int, horizon: int) -> None:
+    """Pre-compile every (batch, chunk, rollout, binned) shape a B-stream
+    sweep bank can hit, so the timed run measures steady-state dispatch."""
+    bank = ForecastBank(["arima"] * B, horizon=horizon)
+    views = bank.views()
+    t = 0.0
+
+    def feed(tb):
+        nonlocal t
+        for _ in range(tb):
+            t += 1.0
+            for v in views:
+                v.update(50_000.0 + t)
+
+    for tb in (1, 2, 3, 4, 8, 12, 16, 20, 24, 28, 32):
+        feed(tb)
+        _ = views[0].binned(horizon, 5)     # fused chunk+rollout shapes
+    for tb in (1, 2, 3, 4, 8, 12, 16):
+        feed(tb)
+        bank.flush()                        # plain chunk shapes
+
+
+def sweep_main(args: argparse.Namespace) -> Dict[str, object]:
+    specs = sweep_specs(args.scenarios, args.duration_h, args.dt, args.seeds)
+    hp = DemeterHyperParams(profile_interval_s=args.profile_interval_s)
+    print(f"== sweep: {len(specs)} Demeter scenarios x "
+          f"{args.duration_h:g}h @ dt={args.dt:g}s ==")
+
+    # Warmup passes: compile every forecast-bank shape the timed sweeps
+    # will hit (plus the GP-bank shapes via a short sweep), so the bank
+    # numbers are steady-state dispatch cost, not jit-compile time.
+    _warm_bank_shapes(len(specs), hp.forecast_horizon)
+    warm = sweep_specs(args.scenarios, min(args.duration_h, 0.5), args.dt,
+                       args.seeds)
+    run_sweep(warm, hp=hp, forecast_backend="bank")
+
+    out: Dict[str, object] = {"n_scenarios": len(specs),
+                              "duration_h": args.duration_h}
+    for backend in ("bank", "scalar"):
+        t0 = time.perf_counter()
+        res = run_sweep(specs, hp=hp, forecast_backend=backend)
+        total = time.perf_counter() - t0
+        out[backend] = {"forecast_update_wall_s": res.forecast_update_wall_s,
+                        "n_forecast_updates": res.n_forecast_updates,
+                        "total_wall_s": total}
+        print(f"{backend:6s}: {res.n_forecast_updates:5d} stream-updates, "
+              f"TSF wall {res.forecast_update_wall_s:8.3f}s "
+              f"(sweep total {total:.1f}s)")
+    speedup = (out["scalar"]["forecast_update_wall_s"]
+               / max(out["bank"]["forecast_update_wall_s"], 1e-9))
+    out["forecast_update_speedup"] = speedup
+    print(f"forecast-update speedup (scalar / bank): {speedup:.1f}x")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("cmd", choices=("micro", "sweep", "all"))
+    ap.add_argument("--streams", type=int, default=16,
+                    help="micro: parallel forecaster streams")
+    ap.add_argument("--ticks", type=int, default=1000,
+                    help="micro: samples per stream")
+    ap.add_argument("--read-every", type=int, default=10,
+                    help="micro: consume forecasts every N ticks (the "
+                         "sweep's opt-interval / metric-interval ratio)")
+    ap.add_argument("--scenarios", type=int, default=16)
+    ap.add_argument("--seeds", type=lambda v: [int(x) for x in v.split(",")],
+                    default=[0])
+    ap.add_argument("--duration-h", type=float, default=2.0)
+    ap.add_argument("--dt", type=float, default=5.0)
+    ap.add_argument("--profile-interval-s", type=float, default=1500.0,
+                    help="profiling-process cadence (paper §3.2 default)")
+    ap.add_argument("--json", default=None,
+                    help="also write the report to this JSON path")
+    args = ap.parse_args()
+
+    report: Dict[str, object] = {}
+    if args.cmd in ("micro", "all"):
+        report["micro"] = micro_main(args)
+    if args.cmd in ("sweep", "all"):
+        report["sweep"] = sweep_main(args)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,9 @@ same grid through the scalar reference oracle and checks step-for-step
 equivalence (and reports the wall-clock speedup).
 """
 import argparse
+from dataclasses import replace
 
+from repro.core import FORECASTER_KINDS
 from repro.dsp import (PeriodicFailures, make_trace, run_sweep,
                        scenario_grid)
 
@@ -21,6 +23,14 @@ def main() -> None:
                     help="comma-separated trace classes")
     ap.add_argument("--controllers", default="static,reactive,ds2")
     ap.add_argument("--seeds", default="0,1")
+    ap.add_argument("--forecast-backend", choices=("bank", "scalar"),
+                    default="bank",
+                    help="Demeter TSF path: shared batched ForecastBank "
+                         "or per-scenario NumPy oracle")
+    ap.add_argument("--forecasters", default="arima",
+                    help="comma-separated forecaster kinds "
+                         f"({','.join(FORECASTER_KINDS)}), cycled across "
+                         "scenarios")
     ap.add_argument("--verify", action="store_true",
                     help="also run the scalar oracle and check equivalence")
     args = ap.parse_args()
@@ -31,10 +41,15 @@ def main() -> None:
     seeds = [int(s) for s in args.seeds.split(",")]
     specs = scenario_grid(traces, controllers, seeds,
                           failures=PeriodicFailures(45 * 60.0))
+    kinds = args.forecasters.split(",")
+    if kinds != ["arima"]:
+        specs = [replace(s, forecaster=kinds[i % len(kinds)])
+                 for i, s in enumerate(specs)]
     print(f"== sweep: {len(specs)} scenarios, {args.hours:g} h each, "
           f"failures every 45 min ==")
 
-    res = run_sweep(specs, engine="batched")
+    res = run_sweep(specs, engine="batched",
+                    forecast_backend=args.forecast_backend)
     print(f"batched engine: {res.wall_s:.2f} s wall for "
           f"{res.n_steps} steps x {len(specs)} scenarios\n")
 
@@ -47,7 +62,8 @@ def main() -> None:
               f"{s['mean_consumer_lag']:10.0f} {s['n_reconfigurations']:6d}")
 
     if args.verify:
-        ref = run_sweep(specs, engine="scalar")
+        ref = run_sweep(specs, engine="scalar",
+                        forecast_backend=args.forecast_backend)
         ok = all(a.allclose(b)
                  for a, b in zip(res.scenarios, ref.scenarios))
         print(f"\nscalar oracle: {ref.wall_s:.2f} s wall -> "

@@ -15,7 +15,10 @@ from .config_space import (ConfigSpace, Parameter, paper_flink_space,
                            tpu_serving_space, tpu_training_space)
 from .demeter import (DemeterController, DemeterHyperParams, Executor,
                       ModelBank)
-from .forecast import OnlineARIMA, binned_forecast
+from .forecast import (FORECASTER_KINDS, HoltWinters, OnlineARIMA,
+                       SeasonalNaive, binned_forecast, make_scalar_forecaster)
+from .forecast_bank import (BankedForecaster, DetectorBank, ForecastBank,
+                            make_forecaster)
 from .gp import GP
 from .gp_bank import GPBank, batched_posterior
 from .latency import LatencyConstraint
@@ -32,5 +35,7 @@ __all__ = [
     "select_profiling_batch", "LatencyConstraint", "MetricDetector",
     "RecoveryTracker", "DemeterController", "DemeterHyperParams", "Executor",
     "ModelBank", "SegmentStore", "Segment", "Observation", "USAGE", "LATENCY",
-    "RECOVERY", "METRICS",
+    "RECOVERY", "METRICS", "FORECASTER_KINDS", "HoltWinters", "SeasonalNaive",
+    "make_scalar_forecaster", "BankedForecaster", "DetectorBank",
+    "ForecastBank", "make_forecaster",
 ]

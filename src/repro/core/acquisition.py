@@ -170,8 +170,8 @@ _pareto_mask_batch = jax.jit(jax.vmap(_pareto_mask_one))
 def _pad_fronts(fronts: Sequence[np.ndarray]
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Stack variable-length (k_i, 2) fronts into padded points + validity."""
-    from .gp_bank import _bucket  # local import: gp_bank imports nothing here
-    k_max = _bucket(max((len(f) for f in fronts), default=1))
+    from .gp_bank import bucket_pow2  # local: gp_bank imports nothing here
+    k_max = bucket_pow2(max((len(f) for f in fronts), default=1))
     b = len(fronts)
     pts = np.zeros((b, k_max, 2))
     valid = np.zeros((b, k_max), dtype=bool)

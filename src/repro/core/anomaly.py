@@ -6,15 +6,28 @@ prediction error beyond a threshold derived from past errors flag an anomalous
 state, and *recovery time = contiguous time spent anomalous* — from failure
 onset until the job has caught back up to the head of the queue (not merely
 until processing resumes).
+
+Two detector backends share these semantics:
+
+* ``"scalar"`` — one :class:`MetricDetector` per metric stream (float64
+  NumPy reference oracle, ring-buffered error windows);
+* ``"bank"`` — all streams advance through one
+  :class:`~repro.core.forecast_bank.DetectorBank` dispatch (batched jitted
+  ARIMA one-step predictors + streaming-MAD thresholds over fixed rings).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
 from .forecast import OnlineARIMA
+
+#: Error window the MAD threshold is computed over (the 512-sample slice the
+#: original unbounded implementation took on read).
+DETECTOR_ERR_WINDOW = 512
 
 
 @dataclass
@@ -25,19 +38,33 @@ class MetricDetector:
     k_sigma: float = 5.0
     min_warmup: int = 12
     model: OnlineARIMA = field(default_factory=lambda: OnlineARIMA(p=4, d=1))
-    _errors: List[float] = field(default_factory=list)
+    _errors: Deque[float] = field(default_factory=deque)
+
+    def __post_init__(self) -> None:
+        self._errors = deque(self._errors, maxlen=DETECTOR_ERR_WINDOW)
 
     def observe(self, value: float) -> bool:
-        """Feed one sample; returns True when the sample is anomalous."""
+        """Feed one sample; returns True when the sample is anomalous.
+
+        Non-finite samples are ignored (metric gaps must not poison the
+        error window)."""
+        if not np.isfinite(value):
+            return False
         anomalous = False
         pred = None
         if self.model.n_observed >= self.min_warmup:
             pred = float(self.model.forecast(1)[0])
-            err = abs(value - pred)
-            scale = self._threshold()
-            anomalous = err > scale
-            if not anomalous:
-                self._errors.append(err)
+            if not np.isfinite(pred):
+                # A sick model must not poison the healthy-error ring (a
+                # single NaN would disable the MAD threshold forever);
+                # treat the sample as warmup and re-learn from the value.
+                pred = None
+            else:
+                err = abs(value - pred)
+                scale = self._threshold()
+                anomalous = err > scale
+                if not anomalous:
+                    self._errors.append(err)
         # The detector is trained on positive executions only (paper §2.3):
         # anomalous samples must not teach the model the outage regime, or a
         # constant-zero throughput would look 'normal' within a few steps.
@@ -48,7 +75,7 @@ class MetricDetector:
     def _threshold(self) -> float:
         if len(self._errors) < self.min_warmup:
             return float("inf")
-        e = np.asarray(self._errors[-512:])
+        e = np.asarray(self._errors)
         mad = np.median(np.abs(e - np.median(e))) * 1.4826
         return float(np.median(e) + self.k_sigma * max(mad, 1e-9))
 
@@ -59,12 +86,15 @@ class RecoveryTracker:
 
     Feed (timestamp, {metric: value}); when an anomalous episode closes,
     :attr:`last_recovery_s` holds its duration. The paper's two signals are
-    input throughput and average consumer lag.
+    input throughput and average consumer lag. ``detector_backend="bank"``
+    routes every metric stream through one batched
+    :class:`~repro.core.forecast_bank.DetectorBank` dispatch per sample.
     """
 
     metrics: tuple = ("throughput", "consumer_lag")
     quorum: int = 1            # how many metrics must fire to call it anomalous
     close_after: int = 3       # healthy samples required to close an episode
+    detector_backend: str = "scalar"   # "scalar" | "bank"
     detectors: Dict[str, MetricDetector] = field(default_factory=dict)
     _open_since: Optional[float] = None
     _healthy_streak: int = 0
@@ -73,13 +103,28 @@ class RecoveryTracker:
     episodes: List[tuple] = field(default_factory=list)
 
     def __post_init__(self) -> None:
-        for m in self.metrics:
-            self.detectors[m] = MetricDetector(m)
+        if self.detector_backend == "scalar":
+            for m in self.metrics:
+                self.detectors[m] = MetricDetector(m)
+            self._bank = None
+        elif self.detector_backend == "bank":
+            from .forecast_bank import DetectorBank   # lazy: avoids cycle
+            self._bank = DetectorBank(len(self.metrics))
+        else:
+            raise ValueError(
+                f"unknown detector backend {self.detector_backend!r}; "
+                f"available: ('scalar', 'bank')")
+
+    def _fired(self, values: Dict[str, float]) -> int:
+        if self._bank is not None:
+            vals = np.array([values.get(m, np.nan) for m in self.metrics],
+                            np.float64)
+            return int(self._bank.observe(vals).sum())
+        return sum(1 for m, v in values.items()
+                   if m in self.detectors and self.detectors[m].observe(v))
 
     def observe(self, ts: float, values: Dict[str, float]) -> bool:
-        fired = sum(1 for m, v in values.items()
-                    if m in self.detectors and self.detectors[m].observe(v))
-        anomalous = fired >= self.quorum
+        anomalous = self._fired(values) >= self.quorum
         if anomalous:
             if self._open_since is None:
                 self._open_since = ts

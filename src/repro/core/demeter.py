@@ -26,7 +26,8 @@ import numpy as np
 
 from .acquisition import ehvi_2d, pareto_front_2d, select_profiling_batch
 from .config_space import ConfigSpace
-from .forecast import OnlineARIMA, binned_forecast
+from .forecast import binned_forecast
+from .forecast_bank import make_forecaster
 from .gp import GP
 from .gp_bank import GPBank
 from .latency import LatencyConstraint
@@ -261,19 +262,35 @@ class DemeterController:
     space: ConfigSpace
     executor: Executor
     hp: DemeterHyperParams = field(default_factory=DemeterHyperParams)
-    tsf: OnlineARIMA = field(default_factory=lambda: OnlineARIMA(p=8, d=1))
+    #: TSF workload forecaster. ``None`` builds one from ``forecaster`` /
+    #: ``forecast_backend``; a sweep engine passes a shared
+    #: :class:`~repro.core.forecast_bank.BankedForecaster` view instead so
+    #: all scenarios' streams advance in one batched update.
+    tsf: Optional[object] = None
     lc: LatencyConstraint = field(default_factory=LatencyConstraint)
     #: GP fitting backend: "bank" = batched jitted L-BFGS (GPBank),
     #: "scalar" = per-GP scipy reference oracle.
     fit_backend: str = "bank"
+    #: TSF forecaster kind (see :data:`repro.core.forecast.FORECASTER_KINDS`)
+    #: and backend: "bank" = batched jitted ForecastBank, "scalar" = the
+    #: float64 NumPy zoo reference oracle.
+    forecaster: str = "arima"
+    forecast_backend: str = "bank"
     store: SegmentStore = field(init=False)
     bank: ModelBank = field(init=False)
     #: event log for experiments: (kind, payload) tuples
     events: List[Tuple[str, Dict]] = field(default_factory=list)
     n_reconfigurations: int = 0
     profile_cost: float = 0.0
+    #: wall-clock spent in the TSF forecaster (updates + rollout reads);
+    #: sweeps aggregate this into ``SweepResult.forecast_update_wall_s``
+    tsf_wall_s: float = 0.0
 
     def __post_init__(self) -> None:
+        if self.tsf is None:
+            self.tsf = make_forecaster(self.forecaster,
+                                       backend=self.forecast_backend,
+                                       horizon=self.hp.forecast_horizon)
         self.store = SegmentStore(self.hp.segment_size)
         self.bank = ModelBank(self.store, fit_backend=self.fit_backend)
         self._candidates = self.space.matrix()
@@ -287,13 +304,18 @@ class DemeterController:
     def ingest(self, metrics: Mapping[str, float]) -> None:
         """Feed target-job telemetry (call every metrics interval)."""
         if "rate" in metrics:
+            t0 = time.perf_counter()
             self.tsf.update(metrics["rate"])
+            self.tsf_wall_s += time.perf_counter() - t0
         if "latency" in metrics:
             self.lc.observe(metrics["latency"])
 
     def predicted_rate(self) -> float:
-        return binned_forecast(self.tsf, self.hp.forecast_horizon,
-                               self.hp.forecast_bins)
+        t0 = time.perf_counter()
+        out = binned_forecast(self.tsf, self.hp.forecast_horizon,
+                              self.hp.forecast_bins)
+        self.tsf_wall_s += time.perf_counter() - t0
+        return out
 
     def _posteriors(self, segment: Segment, metric: str):
         ens = self.bank.ensemble(segment, metric)

@@ -39,12 +39,18 @@ DEFAULT_RESTARTS = 2
 DEFAULT_MAX_ITER = 60
 
 
-def _bucket(n: int, minimum: int = 8) -> int:
-    """Next power of two >= n (stabilizes jit cache keys across calls)."""
+def bucket_pow2(n: int, minimum: int = 8) -> int:
+    """Next power of two >= n (stabilizes jit cache keys across calls).
+
+    Shared by every batched bank (GPs here, forecasters/detectors in
+    :mod:`repro.core.forecast_bank`) for padding batch and window sizes."""
     b = minimum
     while b < n:
         b *= 2
     return b
+
+
+_bucket = bucket_pow2
 
 
 # --------------------------------------------------------------------------

@@ -35,6 +35,8 @@ import numpy as np
 
 from ..core.config_space import paper_flink_space
 from ..core.demeter import DemeterController, DemeterHyperParams, ModelBank
+from ..core.forecast import FORECASTER_KINDS
+from ..core.forecast_bank import ForecastBank, make_forecaster
 from .baselines import make_baseline
 from .executor import (allocated_cost, observe_digest, profile_one,
                        ProfileCost)
@@ -62,11 +64,17 @@ class ScenarioSpec:
     seed: int = 0
     failures: FailureSchedule = field(default_factory=NoFailures)
     label: str = ""
+    #: TSF forecaster kind for Demeter scenarios (ignored by baselines);
+    #: see :data:`repro.core.forecast.FORECASTER_KINDS`.
+    forecaster: str = "arima"
 
     def __post_init__(self) -> None:
         if self.controller not in CONTROLLER_NAMES:
             raise ValueError(f"unknown controller {self.controller!r}; "
                              f"available: {CONTROLLER_NAMES}")
+        if self.forecaster not in FORECASTER_KINDS:
+            raise ValueError(f"unknown forecaster {self.forecaster!r}; "
+                             f"available: {FORECASTER_KINDS}")
 
     @property
     def name(self) -> str:
@@ -180,6 +188,11 @@ class SweepResult:
     #: lazy per-controller fits) and how many models were fitted
     model_update_wall_s: float = 0.0
     n_model_fits: int = 0
+    #: wall-clock the TSF forecasters cost (telemetry updates + rollout
+    #: reads; for the bank backend that is staging + the shared batched
+    #: flush/rollout dispatches) and how many stream-updates were applied
+    forecast_update_wall_s: float = 0.0
+    n_forecast_updates: int = 0
 
     def by_name(self) -> Dict[str, ScenarioResult]:
         return {s.name: s for s in self.scenarios}
@@ -189,6 +202,8 @@ class SweepResult:
                 "n_steps": self.n_steps,
                 "model_update_wall_s": self.model_update_wall_s,
                 "n_model_fits": self.n_model_fits,
+                "forecast_update_wall_s": self.forecast_update_wall_s,
+                "n_forecast_updates": self.n_forecast_updates,
                 "scenarios": [s.summary() for s in self.scenarios]}
 
 
@@ -341,16 +356,27 @@ class _ScenarioView:
 
 
 class _DemeterPolicy:
-    """Demeter's two processes at the paper cadences (§3.2)."""
+    """Demeter's two processes at the paper cadences (§3.2).
+
+    Telemetry ingestion is split out of :meth:`act` so the engine can stage
+    every due scenario's observation and apply the whole batch through one
+    shared :class:`~repro.core.forecast_bank.ForecastBank` flush before any
+    controller consumes a forecast."""
 
     def __init__(self, eng: "SweepEngine", idx: int, seed: int,
                  hp: Optional[DemeterHyperParams],
-                 fit_backend: str = "bank"):
+                 fit_backend: str = "bank",
+                 forecaster: str = "arima",
+                 forecast_backend: str = "bank",
+                 tsf=None):
         self.view = _ScenarioView(eng, idx, seed)
         self.start_config = self.view.cmax
         self.ctl = DemeterController(paper_flink_space(), self.view,
                                      hp=hp or DemeterHyperParams(),
-                                     fit_backend=fit_backend)
+                                     fit_backend=fit_backend,
+                                     forecaster=forecaster,
+                                     forecast_backend=forecast_backend,
+                                     tsf=tsf)
         self._next_ingest = METRIC_WINDOW_S
         self._next_opt = OPT_INTERVAL_S
         # async offset between the two processes (mirrors runner.py)
@@ -359,13 +385,18 @@ class _DemeterPolicy:
     def initial_due(self, eng: "SweepEngine") -> float:
         return min(self._next_ingest, self._next_prof, self._next_opt)
 
+    def pending_ingest(self, eng: "SweepEngine", idx: int, t: float,
+                       i: int) -> Optional[Dict[str, float]]:
+        """The observation to ingest this tick (or None); advances the
+        ingest clock."""
+        self.view.step_index = i
+        if t < self._next_ingest:
+            return None
+        self._next_ingest = t + METRIC_WINDOW_S
+        return self.view.observe() or None
+
     def act(self, eng: "SweepEngine", idx: int, t: float, i: int) -> float:
         self.view.step_index = i
-        if t >= self._next_ingest:
-            self._next_ingest = t + METRIC_WINDOW_S
-            obs = self.view.observe()
-            if obs:
-                self.ctl.ingest(obs)
         if t >= self._next_prof:
             self._next_prof = t + self.ctl.hp.profile_interval_s
             self.ctl.profiling_step()
@@ -389,9 +420,13 @@ class SweepEngine:
                  hp: Optional[DemeterHyperParams] = None,
                  decision_interval_s: float = 60.0,
                  recovery_cap_s: float = RECOVERY_CAP_S,
-                 fit_backend: str = "bank"):
+                 fit_backend: str = "bank",
+                 forecast_backend: str = "bank"):
         if not specs:
             raise ValueError("empty scenario grid")
+        if forecast_backend not in ("bank", "scalar"):
+            raise ValueError(f"unknown forecast backend {forecast_backend!r};"
+                             f" available: ('bank', 'scalar')")
         dts = {s.trace.dt_s for s in specs}
         if len(dts) > 1:
             raise ValueError(f"all traces must share dt_s, got {sorted(dts)}")
@@ -401,6 +436,7 @@ class SweepEngine:
         self.decision_interval_s = decision_interval_s
         self.recovery_cap_s = recovery_cap_s
         self.fit_backend = fit_backend
+        self.forecast_backend = forecast_backend
         self.dt = float(specs[0].trace.dt_s)
 
         S = len(self.specs)
@@ -447,20 +483,47 @@ class SweepEngine:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"available: {sorted(_BACKENDS)}") from None
         S = len(self.specs)
-        policies = []
         seeds = [s.seed for s in self.specs]
+        demeter_idx = [j for j, s in enumerate(self.specs)
+                       if s.controller == "demeter"]
+        # One shared ForecastBank for every Demeter scenario's TSF stream:
+        # the engine stages all due observations per tick and applies them
+        # in a single batched jitted update (mirrors the shared GPBank
+        # model-update). The scalar backend gives each controller its own
+        # float64 NumPy zoo forecaster (the reference oracle).
+        forecast_bank: Optional[ForecastBank] = None
+        tsf_views: Dict[int, object] = {}
+        hp_horizon = (self.hp or DemeterHyperParams()).forecast_horizon
+        if demeter_idx and self.forecast_backend == "bank":
+            forecast_bank = ForecastBank(
+                [self.specs[j].forecaster for j in demeter_idx],
+                horizon=hp_horizon)
+            tsf_views = {j: forecast_bank.view(r)
+                         for r, j in enumerate(demeter_idx)}
+        elif demeter_idx:
+            tsf_views = {j: make_forecaster(self.specs[j].forecaster,
+                                            backend="scalar")
+                         for j in demeter_idx}
         # Policies are built first so their start configs seed the backend.
+        policies = []
         self.backend = None
         for j, spec in enumerate(self.specs):
             if spec.controller == "demeter":
-                policies.append(_DemeterPolicy(self, j, spec.seed, self.hp,
-                                               fit_backend=self.fit_backend))
+                policies.append(_DemeterPolicy(
+                    self, j, spec.seed, self.hp,
+                    fit_backend=self.fit_backend,
+                    forecaster=spec.forecaster,
+                    forecast_backend=self.forecast_backend,
+                    tsf=tsf_views[j]))
             else:
                 policies.append(_BaselinePolicy(spec.controller))
-        demeter_banks = {j: p.ctl.bank for j, p in enumerate(policies)
-                         if isinstance(p, _DemeterPolicy)}
+        demeter_pols = {j: p for j, p in enumerate(policies)
+                        if isinstance(p, _DemeterPolicy)}
+        demeter_banks = {j: p.ctl.bank for j, p in demeter_pols.items()}
         model_update_wall = 0.0
         n_model_fits = 0
+        forecast_wall = 0.0
+        n_forecast_updates = 0
         configs = [p.start_config for p in policies]
         self.backend = backend_cls(self.model, configs, seeds)
         self.reconf_count = np.zeros(S, dtype=int)
@@ -533,6 +596,19 @@ class SweepEngine:
                 pol_due &= active
             if pol_due.any():
                 due = np.nonzero(pol_due)[0]
+                # One shared batched forecast update for every Demeter
+                # controller: each due scenario's telemetry is staged into
+                # the shared ForecastBank, which replays all queued ticks of
+                # all streams in one jitted lax.scan dispatch when the next
+                # controller reads a forecast (the scalar backend updates
+                # inline in the same timed region).
+                due_obs = [(demeter_pols[j],
+                            demeter_pols[j].pending_ingest(self, j, t, i))
+                           for j in due if j in demeter_pols]
+                for pol, obs in due_obs:
+                    if obs is not None:
+                        pol.ctl.ingest(obs)
+                        n_forecast_updates += 1
                 # One shared batched model-update for every Demeter
                 # controller due this tick: all stale (segment, metric) GPs
                 # across the whole grid are refitted in a single GPBank
@@ -549,6 +625,16 @@ class SweepEngine:
         for bank in demeter_banks.values():
             model_update_wall += bank.fit_wall_s
             n_model_fits += bank.n_fits
+        # TSF wall: every controller accumulates its own forecaster wall
+        # (updates, flushes triggered by reads, rollouts) — see
+        # DemeterController.tsf_wall_s. Any leftover staged samples are
+        # flushed here, outside all controller timers, so they are timed
+        # explicitly.
+        if forecast_bank is not None:
+            t0_f = time.perf_counter()
+            forecast_bank.flush()
+            forecast_wall += time.perf_counter() - t0_f
+        forecast_wall += sum(p.ctl.tsf_wall_s for p in demeter_pols.values())
 
         results = []
         for j, spec in enumerate(self.specs):
@@ -574,7 +660,9 @@ class SweepEngine:
         return SweepResult(engine=engine, scenarios=results, wall_s=wall,
                            n_steps=self.n_steps,
                            model_update_wall_s=model_update_wall,
-                           n_model_fits=n_model_fits)
+                           n_model_fits=n_model_fits,
+                           forecast_update_wall_s=forecast_wall,
+                           n_forecast_updates=n_forecast_updates)
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], *,
@@ -582,14 +670,21 @@ def run_sweep(specs: Sequence[ScenarioSpec], *,
               model: Optional[ClusterModel] = None,
               hp: Optional[DemeterHyperParams] = None,
               decision_interval_s: float = 60.0,
-              fit_backend: str = "bank") -> SweepResult:
+              fit_backend: str = "bank",
+              forecast_backend: str = "bank") -> SweepResult:
     """Execute a scenario grid in one invocation.
 
     ``engine="batched"`` is the vectorized hot path; ``engine="scalar"`` is
     the per-scenario SimJob reference oracle (identical orchestration).
     ``fit_backend`` selects the Demeter GP fitting path: ``"bank"`` shares
     one batched jitted model-update across all Demeter scenarios per
-    optimization interval, ``"scalar"`` is the per-GP scipy oracle."""
+    optimization interval, ``"scalar"`` is the per-GP scipy oracle.
+    ``forecast_backend`` selects the TSF path the same way: ``"bank"``
+    advances every Demeter scenario's forecaster in one shared batched
+    ForecastBank update per metric interval, ``"scalar"`` keeps one float64
+    NumPy forecaster per scenario (the reference oracle). Per-scenario
+    forecaster kinds come from :attr:`ScenarioSpec.forecaster`."""
     return SweepEngine(specs, model=model, hp=hp,
                        decision_interval_s=decision_interval_s,
-                       fit_backend=fit_backend).run(engine)
+                       fit_backend=fit_backend,
+                       forecast_backend=forecast_backend).run(engine)

@@ -9,8 +9,10 @@ from . import ops, ref
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .grouped_matmul import grouped_matmul, sort_tokens_for_experts
+from .rls_update import rls_rank1_update
 from .rmsnorm import fused_rmsnorm
 from .ssd_scan import ssd_scan
 
 __all__ = ["ops", "ref", "flash_attention", "decode_attention", "ssd_scan",
-           "grouped_matmul", "sort_tokens_for_experts", "fused_rmsnorm"]
+           "grouped_matmul", "sort_tokens_for_experts", "fused_rmsnorm",
+           "rls_rank1_update"]

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention as _flash_attention
 from .grouped_matmul import grouped_matmul as _grouped_matmul
+from .rls_update import rls_rank1_update as _rls_rank1_update
 from .rmsnorm import fused_rmsnorm as _fused_rmsnorm
 from .ssd_scan import ssd_scan as _ssd_scan
 
@@ -40,3 +41,7 @@ def grouped_matmul(lhs, rhs, tile_expert, **kw):
 
 def fused_rmsnorm(x, res, scale, **kw):
     return _fused_rmsnorm(x, res, scale, interpret=_interpret(), **kw)
+
+
+def rls_rank1_update(P, phi, lam, **kw):
+    return _rls_rank1_update(P, phi, lam, interpret=_interpret(), **kw)

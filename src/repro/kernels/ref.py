@@ -41,6 +41,15 @@ def grouped_matmul_ref(lhs, rhs, tile_expert, blk_m: int = 128):
     return jnp.asarray(out, lhs.dtype)
 
 
+def rls_rank1_update_ref(P, phi, lam):
+    """Batched RLS gain + forgetting-factor covariance update (pure jnp)."""
+    Pphi = jnp.einsum("bij,bj->bi", P, phi)
+    denom = lam + jnp.einsum("bi,bi->b", phi, Pphi)
+    gain = Pphi / denom[:, None]
+    pnew = (P - gain[:, :, None] * Pphi[:, None, :]) / lam[:, None, None]
+    return gain, pnew
+
+
 def fused_rmsnorm_ref(x, res, scale, eps: float = 1e-6):
     s = (x.astype(jnp.float32) + res.astype(jnp.float32))
     var = jnp.mean(jnp.square(s), -1, keepdims=True)

@@ -1,0 +1,96 @@
+"""Property tests pinning ForecastBank/DetectorBank to the scalar oracles.
+
+Random AR orders, differencing orders, forgetting factors and NaN/constant
+streams must produce the same updates, rollouts and anomaly flags on both
+backends. Needs the optional ``hypothesis`` dependency (the ``test``
+extra); deterministic agreement tests live in ``test_forecast_bank.py``.
+
+Agreement tolerances are loose-ish (1e-5 relative) because the RLS
+recursion is numerically chaotic over long horizons — see
+``docs/FORECAST.md``; streams here stay well inside the regime where the
+two float paths agree.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests need the optional dep
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DetectorBank, HoltWinters, MetricDetector,
+                        OnlineARIMA, SeasonalNaive, binned_forecast,
+                        make_forecaster)
+
+finite_vals = st.floats(min_value=1.0, max_value=1e5, allow_nan=False)
+stream = st.lists(st.one_of(finite_vals, st.just(float("nan"))),
+                  min_size=30, max_size=120)
+
+
+def feed(values, *models):
+    for v in values:
+        for m in models:
+            m.update(v)
+
+
+@given(p=st.integers(1, 10), d=st.integers(0, 2),
+       lam=st.floats(0.9, 0.999), values=stream)
+@settings(max_examples=15, deadline=None)
+def test_arima_bank_matches_scalar(p, d, lam, values):
+    s = OnlineARIMA(p=p, d=d, forgetting=lam)
+    v = make_forecaster("arima", backend="bank", p=p, d=d, forgetting=lam)
+    feed(values, s, v)
+    a, b = s.forecast(7), v.forecast(7)
+    scale = 1.0 + np.max(np.abs(a))
+    np.testing.assert_allclose(b, a, rtol=1e-5, atol=1e-5 * scale)
+    assert s.n_observed == v.n_observed
+    assert binned_forecast(v, 7, 3) == pytest.approx(
+        binned_forecast(s, 7, 3), rel=1e-4, abs=1e-5 * scale)
+
+
+@given(const=finite_vals, n=st.integers(10, 60),
+       p=st.integers(1, 8), d=st.integers(0, 2))
+@settings(max_examples=15, deadline=None)
+def test_constant_stream_agreement(const, n, p, d):
+    s = OnlineARIMA(p=p, d=d)
+    v = make_forecaster("arima", backend="bank", p=p, d=d)
+    feed([const] * n, s, v)
+    a, b = s.forecast(5), v.forecast(5)
+    np.testing.assert_allclose(b, a, rtol=1e-7, atol=1e-7 * (1 + abs(const)))
+
+
+@given(alpha=st.floats(0.05, 0.95), beta=st.floats(0.01, 0.9),
+       gamma=st.floats(0.01, 0.9), season=st.integers(0, 8), values=stream)
+@settings(max_examples=15, deadline=None)
+def test_holt_bank_matches_scalar(alpha, beta, gamma, season, values):
+    kw = dict(alpha=alpha, beta=beta, gamma=gamma, season=season)
+    s = HoltWinters(**kw)
+    v = make_forecaster("holt", backend="bank", **kw)
+    feed(values, s, v)
+    a, b = s.forecast(6), v.forecast(6)
+    np.testing.assert_allclose(b, a, rtol=1e-9,
+                               atol=1e-9 * (1.0 + np.max(np.abs(a))))
+    assert s.n_observed == v.n_observed
+
+
+@given(season=st.integers(1, 10), values=stream)
+@settings(max_examples=15, deadline=None)
+def test_seasonal_naive_bank_matches_scalar(season, values):
+    s = SeasonalNaive(season=season)
+    v = make_forecaster("seasonal", backend="bank", season=season)
+    feed(values, s, v)
+    np.testing.assert_allclose(v.forecast(2 * season + 1),
+                               s.forecast(2 * season + 1))
+
+
+@given(base=st.floats(100.0, 1e4), noise=st.floats(0.001, 0.05),
+       outage_at=st.integers(25, 50), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_detector_flags_match_scalar(base, noise, outage_at, seed):
+    rng = np.random.default_rng(seed)
+    healthy = base * (1.0 + rng.normal(0, noise, 70))
+    values = np.concatenate([healthy[:outage_at], np.zeros(10),
+                             healthy[outage_at:]])
+    det_s = MetricDetector("m")
+    det_b = DetectorBank(1)
+    for t, v in enumerate(values):
+        assert bool(det_b.observe(np.array([v]))[0]) == det_s.observe(v), \
+            f"flag diverged at step {t}"

@@ -176,6 +176,58 @@ class TestDemeterInSweep:
         assert batched.scenarios[0].allclose(scalar.scenarios[0])
 
 
+class TestForecastBackend:
+    """forecast_backend="bank" must behave like the scalar TSF oracle."""
+
+    @pytest.fixture(scope="class")
+    def demeter_specs(self):
+        return [
+            ScenarioSpec(trace=make_trace("diurnal", duration_s=1500.0,
+                                          dt_s=5.0),
+                         controller="demeter", seed=0, failures=NoFailures()),
+            ScenarioSpec(trace=make_trace("flash", duration_s=1500.0,
+                                          dt_s=5.0),
+                         controller="demeter", seed=1, failures=NoFailures(),
+                         forecaster="holt"),
+            ScenarioSpec(trace=make_trace("regime", duration_s=1500.0,
+                                          dt_s=5.0),
+                         controller="demeter", seed=2, failures=NoFailures(),
+                         forecaster="seasonal"),
+        ]
+
+    def test_bank_matches_scalar_forecast_backend(self, demeter_specs):
+        bank = run_sweep(demeter_specs, forecast_backend="bank")
+        scal = run_sweep(demeter_specs, forecast_backend="scalar")
+        for a, b in zip(bank.scenarios, scal.scenarios):
+            assert a.allclose(b), f"{a.name} diverged between TSF backends"
+        assert bank.n_forecast_updates == scal.n_forecast_updates > 0
+        assert bank.forecast_update_wall_s > 0
+        assert scal.forecast_update_wall_s > 0
+
+    def test_bank_backend_engine_equivalence(self, demeter_specs):
+        batched = run_sweep(demeter_specs, forecast_backend="bank")
+        scalar = run_sweep(demeter_specs, engine="scalar",
+                           forecast_backend="bank")
+        for a, b in zip(batched.scenarios, scalar.scenarios):
+            assert a.allclose(b), f"{a.name} diverged between sim engines"
+
+    def test_forecast_counters_in_json(self, demeter_specs):
+        res = run_sweep(demeter_specs[:1], forecast_backend="bank")
+        js = res.to_json()
+        assert js["n_forecast_updates"] == res.n_forecast_updates > 0
+        assert js["forecast_update_wall_s"] >= 0
+
+    def test_rejects_unknown_forecast_backend(self):
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match="unknown forecast backend"):
+            run_sweep([spec], forecast_backend="gpu")
+
+    def test_rejects_unknown_forecaster(self):
+        with pytest.raises(ValueError, match="unknown forecaster"):
+            ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0),
+                         forecaster="prophet")
+
+
 BOUNDS = {
     "ysb": (24_000.0, 82_000.0),
     "tsw": (8_000.0, 82_000.0),
