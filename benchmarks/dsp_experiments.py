@@ -22,7 +22,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import FORECASTER_KINDS
+from repro.core import FORECASTER_KINDS, EngineConfig
 from repro.dsp import (PeriodicFailures, RunResult, run_experiment, run_sweep,
                        scenario_grid, make_trace, tsw_like, ysb_like,
                        TRACE_GENERATORS)
@@ -149,8 +149,9 @@ def sweep_main(args: argparse.Namespace) -> None:
           f"({len(traces)} traces x {len(args.controllers)} controllers "
           f"x {len(args.seeds)} seeds), {args.duration_h:g}h @ dt={args.dt:g}s")
 
-    batched = run_sweep(specs, engine="batched", fit_backend=args.fit_backend,
-                        forecast_backend=args.forecast_backend)
+    config = EngineConfig(fit_backend=args.fit_backend,
+                          forecast_backend=args.forecast_backend)
+    batched = run_sweep(specs, config=config)
     print(f"# batched engine: {batched.wall_s:.2f}s wall "
           f"({batched.n_steps} steps x {len(specs)} scenarios)")
     if batched.n_model_fits:
@@ -163,9 +164,7 @@ def sweep_main(args: argparse.Namespace) -> None:
               f"{batched.forecast_update_wall_s:.3f}s TSF wall")
 
     if args.compare_scalar:
-        scalar = run_sweep(specs, engine="scalar",
-                           fit_backend=args.fit_backend,
-                           forecast_backend=args.forecast_backend)
+        scalar = run_sweep(specs, config=config.replace(sim_backend="scalar"))
         mismatched = [a.name for a, b in
                       zip(batched.scenarios, scalar.scenarios)
                       if not a.allclose(b)]

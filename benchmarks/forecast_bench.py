@@ -31,8 +31,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import (DetectorBank, DemeterHyperParams, ForecastBank,
-                        MetricDetector, OnlineARIMA)
+from repro.core import (DetectorBank, DemeterHyperParams, EngineConfig,
+                        ForecastBank, MetricDetector, OnlineARIMA)
 from repro.dsp import ScenarioSpec, make_trace, run_sweep
 
 
@@ -185,13 +185,14 @@ def sweep_main(args: argparse.Namespace) -> Dict[str, object]:
     _warm_bank_shapes(len(specs), hp.forecast_horizon)
     warm = sweep_specs(args.scenarios, min(args.duration_h, 0.5), args.dt,
                        args.seeds)
-    run_sweep(warm, hp=hp, forecast_backend="bank")
+    run_sweep(warm, hp=hp, config=EngineConfig(forecast_backend="bank"))
 
     out: Dict[str, object] = {"n_scenarios": len(specs),
                               "duration_h": args.duration_h}
     for backend in ("bank", "scalar"):
         t0 = time.perf_counter()
-        res = run_sweep(specs, hp=hp, forecast_backend=backend)
+        res = run_sweep(specs, hp=hp,
+                        config=EngineConfig(forecast_backend=backend))
         total = time.perf_counter() - t0
         out[backend] = {"forecast_update_wall_s": res.forecast_update_wall_s,
                         "n_forecast_updates": res.n_forecast_updates,

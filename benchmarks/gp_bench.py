@@ -28,7 +28,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import GP, GPBank, DemeterHyperParams, ehvi_2d, ehvi_2d_batch
+from repro.core import (GP, GPBank, DemeterHyperParams, EngineConfig,
+                        ehvi_2d, ehvi_2d_batch)
 from repro.core.demeter import FIT_MAX_ITER, FIT_RESTARTS
 from repro.dsp import ScenarioSpec, make_trace, run_sweep
 
@@ -126,7 +127,8 @@ def sweep_main(args: argparse.Namespace) -> Dict[str, object]:
                               "duration_h": args.duration_h}
     for backend in ("bank", "scalar"):
         t0 = time.perf_counter()
-        res = run_sweep(specs, hp=hp, fit_backend=backend)
+        res = run_sweep(specs, hp=hp,
+                        config=EngineConfig(fit_backend=backend))
         total = time.perf_counter() - t0
         out[backend] = {"model_update_wall_s": res.model_update_wall_s,
                         "n_model_fits": res.n_model_fits,

@@ -11,7 +11,7 @@ equivalence (and reports the wall-clock speedup).
 import argparse
 from dataclasses import replace
 
-from repro.core import FORECASTER_KINDS
+from repro.core import FORECASTER_KINDS, EngineConfig
 from repro.dsp import (PeriodicFailures, make_trace, run_sweep,
                        scenario_grid)
 
@@ -48,8 +48,8 @@ def main() -> None:
     print(f"== sweep: {len(specs)} scenarios, {args.hours:g} h each, "
           f"failures every 45 min ==")
 
-    res = run_sweep(specs, engine="batched",
-                    forecast_backend=args.forecast_backend)
+    config = EngineConfig(forecast_backend=args.forecast_backend)
+    res = run_sweep(specs, config=config)
     print(f"batched engine: {res.wall_s:.2f} s wall for "
           f"{res.n_steps} steps x {len(specs)} scenarios\n")
 
@@ -62,8 +62,7 @@ def main() -> None:
               f"{s['mean_consumer_lag']:10.0f} {s['n_reconfigurations']:6d}")
 
     if args.verify:
-        ref = run_sweep(specs, engine="scalar",
-                        forecast_backend=args.forecast_backend)
+        ref = run_sweep(specs, config=config.replace(sim_backend="scalar"))
         ok = all(a.allclose(b)
                  for a, b in zip(res.scenarios, ref.scenarios))
         print(f"\nscalar oracle: {ref.wall_s:.2f} s wall -> "

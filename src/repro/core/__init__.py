@@ -4,7 +4,10 @@ Layers (paper §2): TSF workload forecasting (:mod:`forecast`), workload
 segmentation (:mod:`segments`), GP + RGPE modeling (:mod:`gp`, :mod:`rgpe`),
 feasibility-weighted EHVI acquisition (:mod:`acquisition`), runtime latency
 constraints (:mod:`latency`), anomaly-based recovery measurement
-(:mod:`anomaly`) and the profiling/optimization controller (:mod:`demeter`).
+(:mod:`anomaly`), the profiling/optimization controller (:mod:`demeter`),
+and the batched control plane (:mod:`executor`, :mod:`registry`): the
+:class:`Executor` / :class:`BatchExecutor` protocols, the unified
+:class:`EngineConfig`, and the pluggable string-keyed registries.
 """
 from .acquisition import (ehvi_2d, ehvi_2d_batch, expected_improvement,
                           hypervolume_2d, pareto_front_2d,
@@ -13,8 +16,9 @@ from .acquisition import (ehvi_2d, ehvi_2d_batch, expected_improvement,
 from .anomaly import MetricDetector, RecoveryTracker
 from .config_space import (ConfigSpace, Parameter, paper_flink_space,
                            tpu_serving_space, tpu_training_space)
-from .demeter import (DemeterController, DemeterHyperParams, Executor,
-                      ModelBank)
+from .demeter import DemeterController, DemeterHyperParams, ModelBank
+from .executor import (BatchExecutor, EngineConfig, Executor, ProfileSpec,
+                       ScalarAdapter, ScenarioView, coerce_config)
 from .forecast import (FORECASTER_KINDS, HoltWinters, OnlineARIMA,
                        SeasonalNaive, binned_forecast, make_scalar_forecaster)
 from .forecast_bank import (BankedForecaster, DetectorBank, ForecastBank,
@@ -22,6 +26,8 @@ from .forecast_bank import (BankedForecaster, DetectorBank, ForecastBank,
 from .gp import GP
 from .gp_bank import GPBank, batched_posterior
 from .latency import LatencyConstraint
+from .registry import (CONTROLLERS, DETECTOR_BACKENDS, FIT_BACKENDS,
+                       FORECAST_BACKENDS, FORECASTERS, SIM_ENGINES, Registry)
 from .rgpe import RGPEnsemble, build_rgpe
 from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Observation,
                        Segment, SegmentStore)
@@ -38,4 +44,9 @@ __all__ = [
     "RECOVERY", "METRICS", "FORECASTER_KINDS", "HoltWinters", "SeasonalNaive",
     "make_scalar_forecaster", "BankedForecaster", "DetectorBank",
     "ForecastBank", "make_forecaster",
+    # batched control plane
+    "BatchExecutor", "EngineConfig", "ProfileSpec", "ScalarAdapter",
+    "ScenarioView", "coerce_config", "Registry", "CONTROLLERS",
+    "FORECASTERS", "FIT_BACKENDS", "FORECAST_BACKENDS", "DETECTOR_BACKENDS",
+    "SIM_ENGINES",
 ]

@@ -24,6 +24,7 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from .forecast import OnlineARIMA
+from .registry import DETECTOR_BACKENDS
 
 #: Error window the MAD threshold is computed over (the 512-sample slice the
 #: original unbounded implementation took on read).
@@ -80,6 +81,37 @@ class MetricDetector:
         return float(np.median(e) + self.k_sigma * max(mad, 1e-9))
 
 
+#: Registered detector backends share one factory signature:
+#: ``backend(metrics) -> impl`` where ``impl.fired(values) -> int`` counts
+#: the metric streams that flagged this sample as anomalous.
+
+@DETECTOR_BACKENDS.register("scalar")
+class ScalarDetectorSet:
+    """One float64 :class:`MetricDetector` per stream (reference oracle)."""
+
+    def __init__(self, metrics):
+        self.detectors = {m: MetricDetector(m) for m in metrics}
+
+    def fired(self, values: Dict[str, float]) -> int:
+        return sum(1 for m, v in values.items()
+                   if m in self.detectors and self.detectors[m].observe(v))
+
+
+@DETECTOR_BACKENDS.register("bank")
+class BankedDetectorSet:
+    """Every stream through one batched :class:`DetectorBank` dispatch."""
+
+    def __init__(self, metrics):
+        from .forecast_bank import DetectorBank   # lazy: avoids cycle
+        self.metrics = tuple(metrics)
+        self.bank = DetectorBank(len(self.metrics))
+
+    def fired(self, values: Dict[str, float]) -> int:
+        vals = np.array([values.get(m, np.nan) for m in self.metrics],
+                        np.float64)
+        return int(self.bank.observe(vals).sum())
+
+
 @dataclass
 class RecoveryTracker:
     """Tracks the anomalous-state span across several metric detectors.
@@ -103,25 +135,12 @@ class RecoveryTracker:
     episodes: List[tuple] = field(default_factory=list)
 
     def __post_init__(self) -> None:
-        if self.detector_backend == "scalar":
-            for m in self.metrics:
-                self.detectors[m] = MetricDetector(m)
-            self._bank = None
-        elif self.detector_backend == "bank":
-            from .forecast_bank import DetectorBank   # lazy: avoids cycle
-            self._bank = DetectorBank(len(self.metrics))
-        else:
-            raise ValueError(
-                f"unknown detector backend {self.detector_backend!r}; "
-                f"available: ('scalar', 'bank')")
+        self._impl = DETECTOR_BACKENDS.get(self.detector_backend)(self.metrics)
+        # Back-compat: the scalar per-metric detectors stay reachable.
+        self.detectors = getattr(self._impl, "detectors", {})
 
     def _fired(self, values: Dict[str, float]) -> int:
-        if self._bank is not None:
-            vals = np.array([values.get(m, np.nan) for m in self.metrics],
-                            np.float64)
-            return int(self._bank.observe(vals).sum())
-        return sum(1 for m, v in values.items()
-                   if m in self.detectors and self.detectors[m].observe(v))
+        return self._impl.fired(values)
 
     def observe(self, ts: float, values: Dict[str, float]) -> bool:
         anomalous = self._fired(values) >= self.quorum

@@ -20,44 +20,25 @@ from __future__ import annotations
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .acquisition import ehvi_2d, pareto_front_2d, select_profiling_batch
 from .config_space import ConfigSpace
+# Executor lives in core.executor (the control-plane module) now; it is
+# re-exported here so legacy ``from repro.core.demeter import Executor``
+# imports keep working.
+from .executor import EngineConfig, Executor, coerce_config
 from .forecast import binned_forecast
 from .forecast_bank import make_forecaster
 from .gp import GP
 from .gp_bank import GPBank
 from .latency import LatencyConstraint
+from .registry import FIT_BACKENDS
 from .rgpe import RGPEnsemble, build_rgpe
 from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Segment,
                        SegmentStore)
-
-
-class Executor(Protocol):
-    """What Demeter needs from the system it controls."""
-
-    def cmax_config(self) -> Dict[str, float]: ...
-
-    def current_config(self) -> Dict[str, float]: ...
-
-    def reconfigure(self, config: Mapping[str, float]) -> None: ...
-
-    def observe(self) -> Dict[str, float]:
-        """Latest target-job metrics: {'rate', 'latency', 'usage', ...}."""
-        ...
-
-    def profile(self, configs: List[Dict[str, float]], rate: float
-                ) -> List[Optional[Dict[str, float]]]:
-        """Run parallel short-lived profiling jobs at ``rate``; each result
-        carries USAGE / LATENCY / RECOVERY (None for a failed run)."""
-        ...
-
-    def allocated_cost(self, config: Mapping[str, float]) -> float:
-        """Deterministic allocated-resource scalar (for ordering/bias)."""
-        ...
 
 
 @dataclass
@@ -95,6 +76,27 @@ FIT_RESTARTS = 2
 FIT_MAX_ITER = 60
 
 
+#: The registered fit backends share one signature:
+#: ``fitter(datasets, seeds) -> list[GP]`` where ``datasets`` is a sequence
+#: of ``(x, y)`` training pairs and ``seeds`` the per-model restart seeds.
+
+@FIT_BACKENDS.register("scalar")
+def _fit_scalar(datasets: Sequence[Tuple[np.ndarray, np.ndarray]],
+                seeds: Sequence[int]) -> List[GP]:
+    """Per-GP scipy L-BFGS-B loop (the reference oracle)."""
+    return [GP.fit(x, y, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER, seed=s)
+            for (x, y), s in zip(datasets, seeds)]
+
+
+@FIT_BACKENDS.register("bank")
+def _fit_bank(datasets: Sequence[Tuple[np.ndarray, np.ndarray]],
+              seeds: Sequence[int]) -> List[GP]:
+    """Every dataset in one vmapped, jitted GPBank L-BFGS dispatch."""
+    bank = GPBank.fit(list(datasets), restarts=FIT_RESTARTS,
+                      max_iter=FIT_MAX_ITER, seeds=list(seeds))
+    return [bank.member(i) for i in range(len(datasets))]
+
+
 @dataclass
 class ModelBank:
     """Per-(segment, metric) GPs + RGPE ensembles with dirty-tracking.
@@ -127,9 +129,7 @@ class ModelBank:
         default_factory=dict)            # key -> (version, n_fit, gp)
 
     def __post_init__(self) -> None:
-        if self.fit_backend not in ("bank", "scalar"):
-            raise ValueError(f"unknown fit backend {self.fit_backend!r}; "
-                             f"available: ('bank', 'scalar')")
+        FIT_BACKENDS.validate(self.fit_backend)
 
     # -- staleness policy ---------------------------------------------------
     def _plan(self, segment: Segment, metric: str):
@@ -167,13 +167,8 @@ class ModelBank:
             return payload
         x, y = payload
         t0 = time.perf_counter()
-        if self.fit_backend == "scalar":
-            g = GP.fit(x, y, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
-                       seed=self._seed(segment, metric))
-        else:
-            g = GPBank.fit([(x, y)], restarts=FIT_RESTARTS,
-                           max_iter=FIT_MAX_ITER,
-                           seeds=[self._seed(segment, metric)]).member(0)
+        fitter = FIT_BACKENDS.get(self.fit_backend)
+        g = fitter([(x, y)], [self._seed(segment, metric)])[0]
         self.fit_wall_s += time.perf_counter() - t0
         self.n_fits += 1
         self._install(segment, metric, len(y), g)
@@ -208,8 +203,9 @@ class ModelBank:
         """One model-update step for many controllers.
 
         Collects every stale (segment, metric) dataset across ``banks`` and
-        fits them all in a single :class:`GPBank` batch (scalar-backend
-        banks fall back to their per-GP loop). Returns
+        hands each registered fit backend its whole group in one call (the
+        "bank" backend fits its group as a single :class:`GPBank` batch; the
+        "scalar" oracle loops per GP). Returns
         ``(n_models_fitted, wall_seconds)``.
         """
         t0 = time.perf_counter()
@@ -220,20 +216,15 @@ class ModelBank:
         if not jobs:
             return 0, time.perf_counter() - t0
 
-        batched = [j for j in jobs if j[0].fit_backend == "bank"]
-        if batched:
-            gbank = GPBank.fit(
-                [(x, y) for _, _, _, x, y in batched],
-                restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER,
-                seeds=[b._seed(seg, metric)
-                       for b, seg, metric, _, _ in batched])
-            for i, (b, seg, metric, _x, y) in enumerate(batched):
-                b._install(seg, metric, len(y), gbank.member(i))
-        for b, seg, metric, x, y in jobs:
-            if b.fit_backend == "scalar":
-                g = GP.fit(x, y, restarts=FIT_RESTARTS,
-                           max_iter=FIT_MAX_ITER,
-                           seed=b._seed(seg, metric))
+        by_backend: Dict[str, List] = {}
+        for job in jobs:
+            by_backend.setdefault(job[0].fit_backend, []).append(job)
+        for backend, group in by_backend.items():
+            fitter = FIT_BACKENDS.get(backend)
+            gps = fitter([(x, y) for _, _, _, x, y in group],
+                         [b._seed(seg, metric)
+                          for b, seg, metric, _, _ in group])
+            for (b, seg, metric, _x, y), g in zip(group, gps):
                 b._install(seg, metric, len(y), g)
         return len(jobs), time.perf_counter() - t0
 
@@ -257,25 +248,32 @@ class ModelBank:
 
 @dataclass
 class DemeterController:
-    """Binds the two processes to an executor + a configuration space."""
+    """Binds the two processes to an executor + a configuration space.
+
+    Backend selection (GP fit path, TSF path, ...) comes from one
+    :class:`~repro.core.executor.EngineConfig` passed as ``config=``. The
+    old per-backend string kwargs (``fit_backend=``, ``forecast_backend=``)
+    still work as deprecation shims and fold into the config.
+    """
 
     space: ConfigSpace
     executor: Executor
-    hp: DemeterHyperParams = field(default_factory=DemeterHyperParams)
+    #: hyper-parameters; ``None`` resolves to ``config.hp`` (or §3.2 defaults)
+    hp: Optional[DemeterHyperParams] = None
     #: TSF workload forecaster. ``None`` builds one from ``forecaster`` /
-    #: ``forecast_backend``; a sweep engine passes a shared
+    #: ``config.forecast_backend``; a sweep engine passes a shared
     #: :class:`~repro.core.forecast_bank.BankedForecaster` view instead so
     #: all scenarios' streams advance in one batched update.
     tsf: Optional[object] = None
     lc: LatencyConstraint = field(default_factory=LatencyConstraint)
-    #: GP fitting backend: "bank" = batched jitted L-BFGS (GPBank),
-    #: "scalar" = per-GP scipy reference oracle.
-    fit_backend: str = "bank"
-    #: TSF forecaster kind (see :data:`repro.core.forecast.FORECASTER_KINDS`)
-    #: and backend: "bank" = batched jitted ForecastBank, "scalar" = the
-    #: float64 NumPy zoo reference oracle.
+    #: .. deprecated:: use ``config=EngineConfig(fit_backend=...)``.
+    fit_backend: Optional[str] = None
+    #: TSF forecaster kind (see :data:`repro.core.forecast.FORECASTER_KINDS`).
     forecaster: str = "arima"
-    forecast_backend: str = "bank"
+    #: .. deprecated:: use ``config=EngineConfig(forecast_backend=...)``.
+    forecast_backend: Optional[str] = None
+    #: the unified control-plane configuration (backends + hp + cadences)
+    config: Optional[EngineConfig] = None
     store: SegmentStore = field(init=False)
     bank: ModelBank = field(init=False)
     #: event log for experiments: (kind, payload) tuples
@@ -287,6 +285,14 @@ class DemeterController:
     tsf_wall_s: float = 0.0
 
     def __post_init__(self) -> None:
+        self.config = coerce_config(self.config,
+                                    fit_backend=self.fit_backend,
+                                    forecast_backend=self.forecast_backend,
+                                    hp=self.hp)
+        # Resolved backend names stay readable as plain attributes.
+        self.fit_backend = self.config.fit_backend
+        self.forecast_backend = self.config.forecast_backend
+        self.hp = self.config.resolved_hp()
         if self.tsf is None:
             self.tsf = make_forecaster(self.forecaster,
                                        backend=self.forecast_backend,

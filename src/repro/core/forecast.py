@@ -43,6 +43,8 @@ from typing import Deque, List
 
 import numpy as np
 
+from .registry import FORECASTERS
+
 #: Residual window shared by ``residual_std`` across the zoo (the 256-sample
 #: window the original unbounded implementation sliced on read).
 ERR_WINDOW = 256
@@ -298,7 +300,10 @@ class SeasonalNaive:
         return self._last
 
 
-#: Registered scalar forecaster kinds (mirrored by the batched bank).
+#: Built-in scalar forecaster kinds (mirrored by the batched bank). The
+#: authoritative namespace is :data:`repro.core.registry.FORECASTERS` —
+#: third-party kinds registered there are instantly usable on the scalar
+#: backend (the batched ForecastBank covers the built-ins only).
 FORECASTER_KINDS = ("arima", "holt", "seasonal")
 
 #: Per-kind default constructor arguments (the controller's TSF settings).
@@ -308,18 +313,15 @@ FORECASTER_DEFAULTS = {
     "seasonal": dict(season=12),
 }
 
-_SCALAR_ZOO = {"arima": OnlineARIMA, "holt": HoltWinters,
-               "seasonal": SeasonalNaive}
+FORECASTERS.register("arima", OnlineARIMA)
+FORECASTERS.register("holt", HoltWinters)
+FORECASTERS.register("seasonal", SeasonalNaive)
 
 
 def make_scalar_forecaster(kind: str, **kwargs):
-    """Instantiate one scalar zoo member by kind name."""
-    try:
-        cls = _SCALAR_ZOO[kind]
-    except KeyError:
-        raise ValueError(f"unknown forecaster kind {kind!r}; "
-                         f"available: {FORECASTER_KINDS}") from None
-    return cls(**{**FORECASTER_DEFAULTS[kind], **kwargs})
+    """Instantiate one scalar zoo member by registered kind name."""
+    cls = FORECASTERS.get(kind)
+    return cls(**{**FORECASTER_DEFAULTS.get(kind, {}), **kwargs})
 
 
 def binned_forecast(model, horizon: int, bins: int) -> float:

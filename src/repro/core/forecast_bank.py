@@ -51,6 +51,7 @@ from .anomaly import DETECTOR_ERR_WINDOW
 from .forecast import (ERR_WINDOW, FORECASTER_DEFAULTS, FORECASTER_KINDS,
                        P_TRACE_CAP, ROLLOUT_DIFF_CAP, make_scalar_forecaster)
 from .gp_bank import bucket_pow2
+from .registry import FORECAST_BACKENDS
 
 
 # ---------------------------------------------------------------------------
@@ -806,21 +807,34 @@ class ForecastBank:
         return float(cached[i])
 
 
+@FORECAST_BACKENDS.register("scalar")
+def _scalar_forecaster(kind: str, *, horizon: int = 10,
+                       use_pallas: bool = False, **kwargs):
+    """Float64 NumPy zoo member (the reference oracle)."""
+    del horizon, use_pallas              # scalar zoo members roll out lazily
+    return make_scalar_forecaster(kind, **kwargs)
+
+
+@FORECAST_BACKENDS.register("bank")
+def _banked_forecaster(kind: str, *, horizon: int = 10,
+                       use_pallas: bool = False, **kwargs):
+    """Single-stream :class:`BankedForecaster` over its own bank."""
+    return ForecastBank([kind], params=[kwargs], horizon=horizon,
+                        use_pallas=use_pallas).view(0)
+
+
 def make_forecaster(kind: str = "arima", *, backend: str = "bank",
                     horizon: int = 10, use_pallas: bool = False, **kwargs):
-    """One forecaster of ``kind`` on either backend.
+    """One forecaster of ``kind`` on the registered ``backend``.
 
     ``backend="scalar"`` returns the float64 NumPy zoo member (the reference
     oracle); ``backend="bank"`` returns a single-stream
-    :class:`BankedForecaster` over its own :class:`ForecastBank`.
+    :class:`BankedForecaster` over its own :class:`ForecastBank`. Third-party
+    backends registered in :data:`repro.core.registry.FORECAST_BACKENDS`
+    resolve the same way.
     """
-    if backend == "scalar":
-        return make_scalar_forecaster(kind, **kwargs)
-    if backend == "bank":
-        return ForecastBank([kind], params=[kwargs], horizon=horizon,
-                            use_pallas=use_pallas).view(0)
-    raise ValueError(f"unknown forecast backend {backend!r}; "
-                     f"available: ('bank', 'scalar')")
+    factory = FORECAST_BACKENDS.get(backend)
+    return factory(kind, horizon=horizon, use_pallas=use_pallas, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,138 @@
+"""String-keyed registries for the batched control plane.
+
+Every pluggable axis of the stack — controllers, forecasters and the four
+execution backends — is named by a short string in user-facing APIs
+(:class:`~repro.core.executor.EngineConfig`,
+:class:`~repro.dsp.sweep.ScenarioSpec`, the CLIs). This module is the single
+place those names are resolved: a :class:`Registry` maps each name to its
+implementation, rejects unknown names with one canonical error shape
+(``unknown <kind> 'x'; available: (...)``) and lets third-party code add
+entries without editing the sweep engine.
+
+Registries (populated by the modules that define the implementations):
+
+========================  ========================================  =========
+registry                  entry                                     defined in
+========================  ========================================  =========
+:data:`CONTROLLERS`       sweep policy class                        ``repro.dsp.policies``
+:data:`FORECASTERS`       scalar forecaster-zoo class               ``repro.core.forecast``
+:data:`FIT_BACKENDS`      batched GP fitter callable                ``repro.core.demeter``
+:data:`FORECAST_BACKENDS` forecaster factory callable               ``repro.core.forecast_bank``
+:data:`DETECTOR_BACKENDS` anomaly-detector family class             ``repro.core.anomaly``
+:data:`SIM_ENGINES`       sweep executor class                      ``repro.dsp.executor``
+========================  ========================================  =========
+
+Example — registering a third-party controller::
+
+    from repro.core.registry import CONTROLLERS
+
+    @CONTROLLERS.register("pid")
+    class PIDPolicy:
+        @classmethod
+        def start_config_for(cls, spec, config): ...
+        def __init__(self, eng, idx, spec, config, tsf=None): ...
+        def initial_due(self, eng): ...
+        def act(self, eng, idx, t, i): ...
+
+``ScenarioSpec(trace, controller="pid")`` then runs through the sweep engine
+with no further wiring.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Generic, Iterator, Optional, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    """An ordered name -> implementation mapping with uniform errors.
+
+    ``kind`` is the human-readable noun used in error messages (e.g.
+    ``"fit backend"`` produces ``unknown fit backend 'x'; available:
+    ('bank', 'scalar')``).
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, T] = {}
+
+    # -- registration -------------------------------------------------------
+    def register(self, name: str, obj: Optional[T] = None, *,
+                 override: bool = False) -> Callable[[T], T]:
+        """Register ``obj`` under ``name``; usable as a decorator.
+
+        Re-registering an existing name raises unless ``override=True``
+        (guards against two plugins silently shadowing each other).
+        """
+        if not name or not isinstance(name, str):
+            raise ValueError(f"{self.kind} name must be a non-empty string, "
+                             f"got {name!r}")
+
+        def _install(o: T) -> T:
+            if name in self._entries and not override:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered; pass "
+                    f"override=True to replace it")
+            self._entries[name] = o
+            return o
+
+        return _install if obj is None else _install(obj)
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    # -- lookup -------------------------------------------------------------
+    def get(self, name: str) -> T:
+        """The entry for ``name``; raises the canonical ValueError if absent."""
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; "
+                f"available: {self.available()}") from None
+
+    def validate(self, name: str) -> str:
+        """Check ``name`` is registered (canonical error) and return it."""
+        self.get(name)
+        return name
+
+    def available(self) -> Tuple[str, ...]:
+        """Registered names, sorted (the tuple shown in error messages)."""
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._entries))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, entries={self.available()})"
+
+
+#: Sweep controller policies ("static" / "reactive" / "ds2" / "demeter" + plugins).
+CONTROLLERS: Registry = Registry("controller")
+
+#: TSF forecaster kinds ("arima" / "holt" / "seasonal" + plugins). Entries are
+#: the scalar zoo classes; the batched ForecastBank mirrors the built-ins.
+FORECASTERS: Registry = Registry("forecaster")
+
+#: GP fitting backends ("bank" / "scalar"). Entries fit a batch of datasets:
+#: ``fitter(datasets, seeds) -> list[GP]``.
+FIT_BACKENDS: Registry = Registry("fit backend")
+
+#: TSF execution backends ("bank" / "scalar"). Entries build one forecaster:
+#: ``factory(kind, horizon=..., use_pallas=..., **kwargs) -> forecaster``.
+FORECAST_BACKENDS: Registry = Registry("forecast backend")
+
+#: Anomaly-detector backends ("scalar" / "bank") for RecoveryTracker.
+DETECTOR_BACKENDS: Registry = Registry("detector backend")
+
+#: Sweep simulation engines ("batched" / "scalar"). Entries are sweep
+#: executor classes — :class:`~repro.core.executor.BatchExecutor`
+#: implementations that additionally provide the simulation-stepping
+#: surface; subclass :class:`repro.dsp.executor.SweepExecutorBase`.
+SIM_ENGINES: Registry = Registry("engine")

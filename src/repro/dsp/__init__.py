@@ -1,13 +1,17 @@
 """Paper-faithful DSP substrate: simulator, workloads, baselines, harness,
-plus the batched multi-scenario sweep engine."""
+plus the batched multi-scenario sweep engine and its registered control
+plane (sweep executors + controller policies)."""
 from .baselines import (DS2Controller, ReactiveController, StaticController,
                         baseline_config)
-from .executor import DSPExecutor, ProfileCost
+from .executor import (BatchedSweepExecutor, DSPExecutor, ProfileCost,
+                       ScalarSweepExecutor, SweepExecutorBase)
+from .policies import BaselinePolicy, DemeterPolicy, SweepPolicy
 from .runner import FailureRecord, RunResult, run_experiment
 from .simulator import (MAX_PARALLELISM, BatchState, ClusterModel, JobConfig,
                         SimJob, measure_recovery)
-from .sweep import (ScenarioResult, ScenarioSpec, SweepEngine, SweepResult,
-                    paper_grid, run_sweep, scenario_grid)
+from .sweep import (CONTROLLER_NAMES, ScenarioResult, ScenarioSpec,
+                    SweepEngine, SweepResult, paper_grid, run_sweep,
+                    scenario_grid)
 from .workloads import (TRACE_GENERATORS, FailureSchedule, FailuresAt,
                         NoFailures, PeriodicFailures, Trace, constant,
                         diurnal, flash_crowd, make_trace, regime_switching,
@@ -24,4 +28,7 @@ __all__ = [
     "FailureRecord",
     "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
     "scenario_grid", "paper_grid", "run_sweep",
+    # batched control plane
+    "BatchedSweepExecutor", "ScalarSweepExecutor", "SweepExecutorBase",
+    "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
 ]

@@ -20,6 +20,7 @@ import numpy as np
 
 from ..core.config_space import paper_flink_space
 from ..core.demeter import DemeterController, DemeterHyperParams
+from ..core.executor import EngineConfig
 from .baselines import make_baseline
 from .executor import DSPExecutor
 from .simulator import ClusterModel, JobConfig
@@ -82,12 +83,15 @@ def run_experiment(trace: Trace, method: str, *,
                    hp: Optional[DemeterHyperParams] = None,
                    seed: int = 0,
                    duration_s: Optional[float] = None,
-                   failures_schedule: Optional[FailureSchedule] = None
+                   failures_schedule: Optional[FailureSchedule] = None,
+                   config: Optional[EngineConfig] = None
                    ) -> RunResult:
     """Run one (trace, method) cell of the paper's evaluation.
 
     ``failures_schedule`` overrides the paper's 45-minute periodic injection
-    (see :mod:`repro.dsp.workloads` for the composable schedule API)."""
+    (see :mod:`repro.dsp.workloads` for the composable schedule API);
+    ``config`` selects Demeter's model/forecast backends (hyper-parameters
+    fall back to ``config.hp`` when ``hp`` is not given)."""
     model = model or ClusterModel()
     cmax = JobConfig()                     # paper §3.2 C_max
     execu = DSPExecutor(model, cmax, seed=seed, dt=trace.dt_s)
@@ -97,7 +101,7 @@ def run_experiment(trace: Trace, method: str, *,
     baseline = None
     if method == "demeter":
         demeter = DemeterController(paper_flink_space(), execu,
-                                    hp=hp or DemeterHyperParams())
+                                    hp=hp, config=config)
     else:
         baseline, start = make_baseline(method, cmax)
         if start != cmax:

@@ -3,56 +3,58 @@
 The paper-protocol harness (:mod:`repro.dsp.runner`) replays one
 (trace, controller, seed) cell at a time through a scalar Python loop. This
 module executes a whole :class:`ScenarioSpec` grid — trace class x controller
-x seed x failure schedule — as a single vectorized run:
+x seed x failure schedule — as a single vectorized run. The engine itself is
+a thin event loop over two pluggable surfaces:
 
-* the cluster/queueing model hot path advances **all** scenarios at once via
+* a :class:`~repro.core.BatchExecutor` (the target system): the registered
+  ``"batched"`` engine advances **all** scenarios at once via
   :meth:`ClusterModel.step_batch` over a struct-of-arrays
-  :class:`~repro.dsp.simulator.BatchState`;
-* per-controller decision logic runs per decision/optimization interval
-  (every ``decision_interval_s`` for the baselines, the paper's metric /
-  profiling / optimization cadences for Demeter), never per simulation step;
-* Demeter model updates are batched across the grid: before any due
-  controller acts, every stale (segment, metric) GP of every due scenario
-  is refitted in one :class:`~repro.core.gp_bank.GPBank` dispatch
-  (:meth:`~repro.core.demeter.ModelBank.batch_refresh`), so the whole
-  ScenarioSpec grid shares a single jitted model-update step per
-  optimization interval;
-* the scalar path (one :class:`~repro.dsp.simulator.SimJob` per scenario)
-  is kept as a reference oracle: ``run_sweep(..., engine="scalar")`` drives
-  the *same* orchestration through the scalar simulator, and the two engines
-  produce bit-comparable results on a shared seed.
+  :class:`~repro.dsp.simulator.BatchState`; the registered ``"scalar"``
+  engine is the per-scenario :class:`~repro.dsp.simulator.SimJob` reference
+  oracle (identical orchestration, bit-comparable results on a shared
+  seed). See :class:`repro.dsp.executor.BatchedSweepExecutor` /
+  :class:`~repro.dsp.executor.ScalarSweepExecutor`.
+* registered controller policies (:mod:`repro.dsp.policies`), invoked per
+  decision/optimization interval — never per simulation step. Demeter
+  model updates are batched across the grid: before any due controller
+  acts, every stale (segment, metric) GP of every due scenario is refitted
+  in one :class:`~repro.core.gp_bank.GPBank` dispatch
+  (:meth:`~repro.core.demeter.ModelBank.batch_refresh`), and every Demeter
+  scenario's TSF stream lives in one shared
+  :class:`~repro.core.forecast_bank.ForecastBank`.
 
-Failure injection, NR bookkeeping and the 6-minute recovery cap follow the
-runner's Table-3 semantics.
+Everything is configured through one
+:class:`~repro.core.executor.EngineConfig`; the legacy string kwargs
+(``engine=``, ``fit_backend=``, ``forecast_backend=``) keep working as
+deprecation shims. Failure injection, NR bookkeeping and the 6-minute
+recovery cap follow the runner's Table-3 semantics.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.config_space import paper_flink_space
-from ..core.demeter import DemeterController, DemeterHyperParams, ModelBank
+from ..core.demeter import DemeterHyperParams, ModelBank
+from ..core.executor import EngineConfig, coerce_config, warn_legacy_kwarg
 from ..core.forecast import FORECASTER_KINDS
 from ..core.forecast_bank import ForecastBank, make_forecaster
-from .baselines import make_baseline
-from .executor import (allocated_cost, observe_digest, profile_one,
-                       ProfileCost)
-from .runner import (FAILURE_INTERVAL_S, METRIC_WINDOW_S, OPT_INTERVAL_S,
-                     RECOVERY_CAP_S, FailureRecord)
-from .simulator import (BatchedNormals, BatchState, ClusterModel, JobConfig,
-                        SimJob)
+from ..core.registry import CONTROLLERS, FORECASTERS, SIM_ENGINES
+from . import policies as _policies  # noqa: F401  (registers the built-ins)
+from .executor import HIST_KEYS, SweepExecutorBase
+from .runner import FAILURE_INTERVAL_S, RECOVERY_CAP_S, FailureRecord
+from .simulator import ClusterModel
 from .workloads import (FailureSchedule, NoFailures, PeriodicFailures, Trace,
                         make_trace)
 
+#: Built-in controller names; the authoritative namespace is
+#: :data:`repro.core.registry.CONTROLLERS` (third-party policies registered
+#: there are accepted everywhere these names are).
 CONTROLLER_NAMES = ("static", "reactive", "ds2", "demeter")
 
-#: Metric keys kept as full per-scenario history (controller windows +
-#: result arrays both read from these).
-_HIST_KEYS = ("rate", "latency", "utilization", "throughput", "consumer_lag",
-              "usage_cpu", "usage_mem_mb")
+_HIST_KEYS = HIST_KEYS                          # backwards-compat alias
 
 
 @dataclass(frozen=True, eq=False)
@@ -65,16 +67,12 @@ class ScenarioSpec:
     failures: FailureSchedule = field(default_factory=NoFailures)
     label: str = ""
     #: TSF forecaster kind for Demeter scenarios (ignored by baselines);
-    #: see :data:`repro.core.forecast.FORECASTER_KINDS`.
+    #: see :data:`repro.core.registry.FORECASTERS`.
     forecaster: str = "arima"
 
     def __post_init__(self) -> None:
-        if self.controller not in CONTROLLER_NAMES:
-            raise ValueError(f"unknown controller {self.controller!r}; "
-                             f"available: {CONTROLLER_NAMES}")
-        if self.forecaster not in FORECASTER_KINDS:
-            raise ValueError(f"unknown forecaster {self.forecaster!r}; "
-                             f"available: {FORECASTER_KINDS}")
+        CONTROLLERS.validate(self.controller)
+        FORECASTERS.validate(self.forecaster)
 
     @property
     def name(self) -> str:
@@ -208,235 +206,53 @@ class SweepResult:
 
 
 # ---------------------------------------------------------------------------
-# stepping backends
-# ---------------------------------------------------------------------------
-
-class _BatchedBackend:
-    """All scenarios advance through one vectorized step_batch call."""
-
-    def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
-                 seeds: Sequence[int]):
-        self.model = model
-        self.state = BatchState.from_configs(configs)
-        self.rngs = BatchedNormals(seeds)
-        # Config-derived values only change on reconfiguration; cache them.
-        self._cap_base = model.capacity_batch(self.state)
-        self._cfg_cache = list(configs)
-
-    def step_all(self, rates: np.ndarray, dt: float) -> Dict[str, np.ndarray]:
-        return self.model.step_batch(self.state, rates, dt, self.rngs,
-                                     capacity_base=self._cap_base)
-
-    def inject_failure(self, i: int) -> None:
-        self.model.inject_failure_batch(self.state, i)
-
-    def reconfigure(self, i: int, cfg: JobConfig,
-                    restart_s: Optional[float] = None) -> bool:
-        applied = self.model.reconfigure_batch(self.state, i, cfg, restart_s)
-        if applied:
-            self._cap_base[i] = self.model.capacity(cfg)
-            self._cfg_cache[i] = cfg
-        return applied
-
-    def config_of(self, i: int) -> JobConfig:
-        return self._cfg_cache[i]
-
-    def workers(self) -> np.ndarray:
-        return self.state.workers
-
-    def caught_up(self) -> np.ndarray:
-        return self.state.caught_up
-
-
-class _ScalarBackend:
-    """Reference oracle: one SimJob per scenario, stepped in a Python loop."""
-
-    def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
-                 seeds: Sequence[int]):
-        self.model = model
-        self.jobs = [SimJob(model, c, seed=s)
-                     for c, s in zip(configs, seeds)]
-
-    def step_all(self, rates: np.ndarray, dt: float) -> Dict[str, np.ndarray]:
-        ms = [job.step(float(r), dt) for job, r in zip(self.jobs, rates)]
-        return {k: np.array([m[k] for m in ms]) for k in ms[0]}
-
-    def inject_failure(self, i: int) -> None:
-        self.jobs[i].inject_failure()
-
-    def reconfigure(self, i: int, cfg: JobConfig,
-                    restart_s: Optional[float] = None) -> bool:
-        if self.jobs[i].config == cfg:
-            return False
-        self.jobs[i].reconfigure(cfg, restart_s=restart_s)
-        return True
-
-    def config_of(self, i: int) -> JobConfig:
-        return self.jobs[i].config
-
-    def workers(self) -> np.ndarray:
-        return np.array([float(j.config.workers) for j in self.jobs])
-
-    def caught_up(self) -> np.ndarray:
-        return np.array([j.caught_up for j in self.jobs])
-
-
-_BACKENDS = {"batched": _BatchedBackend, "scalar": _ScalarBackend}
-
-
-# ---------------------------------------------------------------------------
-# controller policies (invoked per decision interval, not per sim step)
-# ---------------------------------------------------------------------------
-
-class _BaselinePolicy:
-    """Wraps a decide()-style controller at a fixed decision cadence.
-
-    ``act`` returns the next time the policy is due, so the engine schedules
-    it by event time instead of polling every simulation step."""
-
-    def __init__(self, kind: str):
-        self.ctl, self.start_config = make_baseline(kind)
-
-    def initial_due(self, eng: "SweepEngine") -> float:
-        return eng.decision_interval_s
-
-    #: what decide()-style controllers actually consume from a window
-    WINDOW_KEYS = ("utilization", "rate", "throughput", "latency")
-
-    def act(self, eng: "SweepEngine", idx: int, t: float, i: int) -> float:
-        window = eng.window_dicts(idx, i, METRIC_WINDOW_S,
-                                  keys=self.WINDOW_KEYS)
-        current = eng.backend.config_of(idx)
-        new = self.ctl.decide(t, window, current)
-        if new is not None:
-            eng.apply_reconfig(idx, new,
-                               getattr(self.ctl, "restart_s", None))
-        return t + eng.decision_interval_s
-
-
-class _ScenarioView:
-    """Demeter ``Executor`` protocol served from the sweep engine's batch
-    state + telemetry history for one scenario row."""
-
-    def __init__(self, eng: "SweepEngine", idx: int, seed: int):
-        self.eng = eng
-        self.idx = idx
-        self.seed = seed
-        self.cmax = JobConfig()
-        self.profile_cost = ProfileCost()
-        self.step_index = 0          # advanced by the engine each sim step
-
-    def cmax_config(self) -> Dict[str, float]:
-        return self.cmax.to_dict()
-
-    def current_config(self) -> Dict[str, float]:
-        return self.eng.backend.config_of(self.idx).to_dict()
-
-    def reconfigure(self, config: Mapping[str, float]) -> None:
-        self.eng.apply_reconfig(self.idx, JobConfig.from_dict(config), None)
-
-    OBSERVE_KEYS = ("rate", "latency", "usage_cpu", "usage_mem_mb")
-
-    def observe(self) -> Dict[str, float]:
-        w = self.eng.window_dicts(self.idx, self.step_index, 60.0,
-                                  keys=self.OBSERVE_KEYS)
-        return observe_digest(self.eng.model, self.cmax, w)
-
-    def profile(self, configs: List[Dict[str, float]], rate: float
-                ) -> List[Optional[Dict[str, float]]]:
-        dt = self.eng.dt
-        return [profile_one(self.eng.model, self.cmax,
-                            JobConfig.from_dict(c), rate, dt,
-                            seed=self.seed * 1009 + i + int(rate),
-                            account=lambda m: self.profile_cost.add(m, dt))
-                for i, c in enumerate(configs)]
-
-    def allocated_cost(self, config: Mapping[str, float]) -> float:
-        return allocated_cost(self.eng.model, self.cmax, config)
-
-
-class _DemeterPolicy:
-    """Demeter's two processes at the paper cadences (§3.2).
-
-    Telemetry ingestion is split out of :meth:`act` so the engine can stage
-    every due scenario's observation and apply the whole batch through one
-    shared :class:`~repro.core.forecast_bank.ForecastBank` flush before any
-    controller consumes a forecast."""
-
-    def __init__(self, eng: "SweepEngine", idx: int, seed: int,
-                 hp: Optional[DemeterHyperParams],
-                 fit_backend: str = "bank",
-                 forecaster: str = "arima",
-                 forecast_backend: str = "bank",
-                 tsf=None):
-        self.view = _ScenarioView(eng, idx, seed)
-        self.start_config = self.view.cmax
-        self.ctl = DemeterController(paper_flink_space(), self.view,
-                                     hp=hp or DemeterHyperParams(),
-                                     fit_backend=fit_backend,
-                                     forecaster=forecaster,
-                                     forecast_backend=forecast_backend,
-                                     tsf=tsf)
-        self._next_ingest = METRIC_WINDOW_S
-        self._next_opt = OPT_INTERVAL_S
-        # async offset between the two processes (mirrors runner.py)
-        self._next_prof = OPT_INTERVAL_S / 2.0 + self.ctl.hp.profile_interval_s
-
-    def initial_due(self, eng: "SweepEngine") -> float:
-        return min(self._next_ingest, self._next_prof, self._next_opt)
-
-    def pending_ingest(self, eng: "SweepEngine", idx: int, t: float,
-                       i: int) -> Optional[Dict[str, float]]:
-        """The observation to ingest this tick (or None); advances the
-        ingest clock."""
-        self.view.step_index = i
-        if t < self._next_ingest:
-            return None
-        self._next_ingest = t + METRIC_WINDOW_S
-        return self.view.observe() or None
-
-    def act(self, eng: "SweepEngine", idx: int, t: float, i: int) -> float:
-        self.view.step_index = i
-        if t >= self._next_prof:
-            self._next_prof = t + self.ctl.hp.profile_interval_s
-            self.ctl.profiling_step()
-        if t >= self._next_opt:
-            self._next_opt = t + OPT_INTERVAL_S
-            # Push the telemetry the engine already holds instead of having
-            # the controller pull it back through the executor protocol.
-            self.ctl.optimization_step(metrics=self.view.observe())
-        return min(self._next_ingest, self._next_prof, self._next_opt)
-
-
-# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
 class SweepEngine:
-    """Executes a ScenarioSpec grid; same orchestration for both backends."""
+    """Executes a ScenarioSpec grid; a thin event loop over registered
+    policies and a :class:`~repro.core.BatchExecutor`.
+
+    Configuration comes from one
+    :class:`~repro.core.executor.EngineConfig`; the legacy ``fit_backend=``
+    / ``forecast_backend=`` string kwargs still work as deprecation shims.
+    """
 
     def __init__(self, specs: Sequence[ScenarioSpec], *,
+                 config: Optional[EngineConfig] = None,
                  model: Optional[ClusterModel] = None,
                  hp: Optional[DemeterHyperParams] = None,
-                 decision_interval_s: float = 60.0,
+                 decision_interval_s: Optional[float] = None,
                  recovery_cap_s: float = RECOVERY_CAP_S,
-                 fit_backend: str = "bank",
-                 forecast_backend: str = "bank"):
+                 fit_backend: Optional[str] = None,
+                 forecast_backend: Optional[str] = None):
         if not specs:
             raise ValueError("empty scenario grid")
-        if forecast_backend not in ("bank", "scalar"):
-            raise ValueError(f"unknown forecast backend {forecast_backend!r};"
-                             f" available: ('bank', 'scalar')")
+        self._explicit_config = config is not None
+        self.config = coerce_config(config, fit_backend=fit_backend,
+                                    forecast_backend=forecast_backend,
+                                    hp=hp,
+                                    decision_interval_s=decision_interval_s)
+        # One error surface, before any work: with the shared-bank TSF path,
+        # every banked scenario's forecaster must be a kind the ForecastBank
+        # can pack (plugin kinds run on the scalar backend).
+        if self.config.forecast_backend == "bank":
+            for s in specs:
+                cls = CONTROLLERS.get(s.controller)
+                if getattr(cls, "uses_tsf_bank", False) \
+                        and s.forecaster not in FORECASTER_KINDS:
+                    raise ValueError(
+                        f"forecaster {s.forecaster!r} (scenario {s.name!r}) "
+                        f"is not supported by forecast_backend='bank'; "
+                        f"bankable kinds: {FORECASTER_KINDS}. Use "
+                        f"EngineConfig(forecast_backend='scalar') for "
+                        f"plugin forecasters.")
         dts = {s.trace.dt_s for s in specs}
         if len(dts) > 1:
             raise ValueError(f"all traces must share dt_s, got {sorted(dts)}")
         self.specs = list(specs)
         self.model = model or ClusterModel()
-        self.hp = hp
-        self.decision_interval_s = decision_interval_s
         self.recovery_cap_s = recovery_cap_s
-        self.fit_backend = fit_backend
-        self.forecast_backend = forecast_backend
         self.dt = float(specs[0].trace.dt_s)
 
         S = len(self.specs)
@@ -453,82 +269,83 @@ class SweepEngine:
         self.fail_times = [s.failures.times(s.trace.duration_s)
                            for s in self.specs]
 
-        # set by run()
-        self.backend = None
-        self.hist: Dict[str, np.ndarray] = {}
-        self.workers_hist: Optional[np.ndarray] = None
-        self.reconf_count = np.zeros(S, dtype=int)
+        #: the BatchExecutor of the current/most recent run()
+        self.executor: Optional[SweepExecutorBase] = None
 
-    # -- services used by controller policies -------------------------------
-    def window_dicts(self, idx: int, i: int, seconds: float,
-                     keys: Sequence[str] = _HIST_KEYS
-                     ) -> List[Dict[str, float]]:
-        """Last ``seconds`` of scenario ``idx``'s telemetry as metric dicts
-        (the shape decide()-style controllers consume), ending at step i."""
-        n = max(int(seconds / self.dt), 1)
-        lo = max(i - n + 1, 0)
-        cols = [self.hist[k][idx, lo:i + 1] for k in keys]
-        return [dict(zip(keys, row)) for row in zip(*cols)]
+    # -- resolved config conveniences ---------------------------------------
+    @property
+    def hp(self) -> Optional[DemeterHyperParams]:
+        return self.config.hp
 
-    def apply_reconfig(self, idx: int, cfg: JobConfig,
-                       restart_s: Optional[float]) -> None:
-        if self.backend.reconfigure(idx, cfg, restart_s):
-            self.reconf_count[idx] += 1
+    @property
+    def decision_interval_s(self) -> float:
+        return self.config.decision_interval_s
+
+    @property
+    def fit_backend(self) -> str:
+        return self.config.fit_backend
+
+    @property
+    def forecast_backend(self) -> str:
+        return self.config.forecast_backend
 
     # -- main loop -----------------------------------------------------------
-    def run(self, engine: str = "batched") -> SweepResult:
-        try:
-            backend_cls = _BACKENDS[engine]
-        except KeyError:
-            raise ValueError(f"unknown engine {engine!r}; "
-                             f"available: {sorted(_BACKENDS)}") from None
+    def run(self, engine: Optional[str] = None) -> SweepResult:
+        """Execute the grid on ``config.sim_backend``.
+
+        ``engine=`` is the deprecated per-run override of the simulation
+        backend; it is validated against
+        :data:`repro.core.registry.SIM_ENGINES`.
+        """
+        config = self.config
+        if engine is not None:
+            if self._explicit_config:
+                raise ValueError(
+                    "pass either config=EngineConfig(sim_backend=...) or "
+                    "the legacy engine= kwarg, not both")
+            warn_legacy_kwarg("engine")
+            config = config.replace(sim_backend=SIM_ENGINES.validate(engine))
+        executor_cls = SIM_ENGINES.get(config.sim_backend)
+
         S = len(self.specs)
         seeds = [s.seed for s in self.specs]
-        demeter_idx = [j for j, s in enumerate(self.specs)
-                       if s.controller == "demeter"]
-        # One shared ForecastBank for every Demeter scenario's TSF stream:
-        # the engine stages all due observations per tick and applies them
-        # in a single batched jitted update (mirrors the shared GPBank
-        # model-update). The scalar backend gives each controller its own
-        # float64 NumPy zoo forecaster (the reference oracle).
+        policy_classes = [CONTROLLERS.get(s.controller) for s in self.specs]
+        # Policies declare their start configs up front: the executor boots
+        # every scenario's job with them.
+        start_configs = [cls.start_config_for(spec, config)
+                         for cls, spec in zip(policy_classes, self.specs)]
+        self.executor = ex = executor_cls(
+            self.model, start_configs, seeds, dt=self.dt,
+            n_steps=self.n_steps, detector_backend=config.detector_backend)
+
+        # One shared ForecastBank for every scenario whose policy opts in
+        # (``uses_tsf_bank``): the engine stages all due observations per
+        # tick and applies them in a single batched jitted update (mirrors
+        # the shared GPBank model-update). The scalar backend gives each
+        # policy its own float64 NumPy zoo forecaster (reference oracle).
+        hp_horizon = config.resolved_hp().forecast_horizon
+        bank_rows = [j for j, cls in enumerate(policy_classes)
+                     if getattr(cls, "uses_tsf_bank", False)]
         forecast_bank: Optional[ForecastBank] = None
         tsf_views: Dict[int, object] = {}
-        hp_horizon = (self.hp or DemeterHyperParams()).forecast_horizon
-        if demeter_idx and self.forecast_backend == "bank":
+        if bank_rows and config.forecast_backend == "bank":
             forecast_bank = ForecastBank(
-                [self.specs[j].forecaster for j in demeter_idx],
+                [self.specs[j].forecaster for j in bank_rows],
                 horizon=hp_horizon)
             tsf_views = {j: forecast_bank.view(r)
-                         for r, j in enumerate(demeter_idx)}
-        elif demeter_idx:
+                         for r, j in enumerate(bank_rows)}
+        elif bank_rows:
             tsf_views = {j: make_forecaster(self.specs[j].forecaster,
                                             backend="scalar")
-                         for j in demeter_idx}
-        # Policies are built first so their start configs seed the backend.
-        policies = []
-        self.backend = None
-        for j, spec in enumerate(self.specs):
-            if spec.controller == "demeter":
-                policies.append(_DemeterPolicy(
-                    self, j, spec.seed, self.hp,
-                    fit_backend=self.fit_backend,
-                    forecaster=spec.forecaster,
-                    forecast_backend=self.forecast_backend,
-                    tsf=tsf_views[j]))
-            else:
-                policies.append(_BaselinePolicy(spec.controller))
-        demeter_pols = {j: p for j, p in enumerate(policies)
-                        if isinstance(p, _DemeterPolicy)}
-        demeter_banks = {j: p.ctl.bank for j, p in demeter_pols.items()}
+                         for j in bank_rows}
+
+        policies = [cls(self, j, spec, config, tsf=tsf_views.get(j))
+                    for j, (cls, spec)
+                    in enumerate(zip(policy_classes, self.specs))]
         model_update_wall = 0.0
         n_model_fits = 0
         forecast_wall = 0.0
         n_forecast_updates = 0
-        configs = [p.start_config for p in policies]
-        self.backend = backend_cls(self.model, configs, seeds)
-        self.reconf_count = np.zeros(S, dtype=int)
-        self.hist = {k: np.zeros((S, self.n_steps)) for k in _HIST_KEYS}
-        self.workers_hist = np.zeros((S, self.n_steps))
 
         pending: Dict[int, FailureRecord] = {}
         pending_reconf = np.zeros(S, dtype=int)
@@ -544,10 +361,7 @@ class SweepEngine:
         t0 = time.perf_counter()
         for i in range(self.n_steps):
             t = i * self.dt
-            m = self.backend.step_all(self.R[:, i], self.dt)
-            for k in _HIST_KEYS:
-                self.hist[k][:, i] = m[k]
-            self.workers_hist[:, i] = self.backend.workers()
+            ex.step(self.R[:, i])
             active = None if uniform else (t < end_time)
 
             # -- failure injection + Table-3 recovery bookkeeping ----------
@@ -558,7 +372,7 @@ class SweepEngine:
             if due.any():
                 injected = np.nonzero(due)[0]
                 for j in injected:
-                    self.backend.inject_failure(j)
+                    ex.inject_failure(j)
                     if j in pending:
                         # previous failure never resolved before this one
                         # landed: close it as NR rather than dropping it
@@ -566,19 +380,19 @@ class SweepEngine:
                     pending[j] = FailureRecord(t_inject=t,
                                                workload=float(self.R[j, i]),
                                                recovery_s=None)
-                    pending_reconf[j] = self.reconf_count[j]
+                    pending_reconf[j] = ex.reconf_count[j]
                     next_fail[j] += 1
                     ft = self.fail_times[j]
                     nf_time[j] = ft[next_fail[j]] \
                         if next_fail[j] < len(ft) else np.inf
             if pending:
-                caught = self.backend.caught_up()
+                caught = ex.caught_up()
                 for j in [j for j in pending
                           if j not in injected
                           and (active is None or active[j])]:
                     rec = pending[j]
                     elapsed = t - rec.t_inject
-                    if self.reconf_count[j] != pending_reconf[j]:
+                    if ex.reconf_count[j] != pending_reconf[j]:
                         rec.recovery_s = None       # NR: reconfig overlapped
                     elif caught[j]:
                         rec.recovery_s = elapsed
@@ -596,24 +410,27 @@ class SweepEngine:
                 pol_due &= active
             if pol_due.any():
                 due = np.nonzero(pol_due)[0]
-                # One shared batched forecast update for every Demeter
-                # controller: each due scenario's telemetry is staged into
+                # One shared batched forecast update for every policy that
+                # staged telemetry: each due scenario's observation lands in
                 # the shared ForecastBank, which replays all queued ticks of
                 # all streams in one jitted lax.scan dispatch when the next
-                # controller reads a forecast (the scalar backend updates
-                # inline in the same timed region).
-                due_obs = [(demeter_pols[j],
-                            demeter_pols[j].pending_ingest(self, j, t, i))
-                           for j in due if j in demeter_pols]
+                # policy reads a forecast (the scalar backend updates inline
+                # in the same timed region).
+                due_obs = [(policies[j],
+                            policies[j].pending_ingest(self, j, t, i))
+                           for j in due
+                           if hasattr(policies[j], "pending_ingest")]
                 for pol, obs in due_obs:
                     if obs is not None:
-                        pol.ctl.ingest(obs)
+                        pol.ingest(obs)
                         n_forecast_updates += 1
-                # One shared batched model-update for every Demeter
-                # controller due this tick: all stale (segment, metric) GPs
-                # across the whole grid are refitted in a single GPBank
-                # dispatch before any controller acts.
-                banks = [demeter_banks[j] for j in due if j in demeter_banks]
+                # One shared batched model-update for every controller due
+                # this tick: all stale (segment, metric) GPs across the
+                # whole grid are refitted in a single GPBank dispatch
+                # before any controller acts.
+                banks = [b for j in due
+                         if (b := getattr(policies[j], "bank", None))
+                         is not None]
                 if banks:
                     n_fit, fit_wall = ModelBank.batch_refresh(banks)
                     model_update_wall += fit_wall
@@ -622,10 +439,12 @@ class SweepEngine:
                     policy_next[j] = policies[j].act(self, j, t, i)
         wall = time.perf_counter() - t0
         # Fold in lazy fits (segments first hit mid-act, cold starts).
-        for bank in demeter_banks.values():
-            model_update_wall += bank.fit_wall_s
-            n_model_fits += bank.n_fits
-        # TSF wall: every controller accumulates its own forecaster wall
+        for p in policies:
+            bank = getattr(p, "bank", None)
+            if bank is not None:
+                model_update_wall += bank.fit_wall_s
+                n_model_fits += bank.n_fits
+        # TSF wall: every policy accumulates its own forecaster wall
         # (updates, flushes triggered by reads, rollouts) — see
         # DemeterController.tsf_wall_s. Any leftover staged samples are
         # flushed here, outside all controller timers, so they are timed
@@ -634,31 +453,30 @@ class SweepEngine:
             t0_f = time.perf_counter()
             forecast_bank.flush()
             forecast_wall += time.perf_counter() - t0_f
-        forecast_wall += sum(p.ctl.tsf_wall_s for p in demeter_pols.values())
+        forecast_wall += sum(getattr(p, "tsf_wall_s", 0.0) for p in policies)
 
         results = []
         for j, spec in enumerate(self.specs):
             if j in pending:
                 failures[j].append(pending[j])
             n = int(self.n_steps_each[j])
-            view = getattr(policies[j], "view", None)
-            cost = view.profile_cost if view is not None else ProfileCost()
+            cost = ex.profile_costs[j]
             results.append(ScenarioResult(
                 name=spec.name, trace=spec.trace.name,
                 controller=spec.controller, seed=spec.seed,
                 times=np.arange(n) * self.dt,
-                rates=self.hist["rate"][j, :n].copy(),
-                latencies=self.hist["latency"][j, :n].copy(),
-                usage_cpu=self.hist["usage_cpu"][j, :n].copy(),
-                usage_mem_mb=self.hist["usage_mem_mb"][j, :n].copy(),
-                workers=self.workers_hist[j, :n].copy(),
-                consumer_lag=self.hist["consumer_lag"][j, :n].copy(),
+                rates=ex.hist["rate"][j, :n].copy(),
+                latencies=ex.hist["latency"][j, :n].copy(),
+                usage_cpu=ex.hist["usage_cpu"][j, :n].copy(),
+                usage_mem_mb=ex.hist["usage_mem_mb"][j, :n].copy(),
+                workers=ex.workers_hist[j, :n].copy(),
+                consumer_lag=ex.hist["consumer_lag"][j, :n].copy(),
                 failures=failures[j],
-                n_reconfigurations=int(self.reconf_count[j]),
+                n_reconfigurations=int(ex.reconf_count[j]),
                 profile_cpu_s=cost.cpu_s, profile_mem_mb_s=cost.mem_mb_s,
             ))
-        return SweepResult(engine=engine, scenarios=results, wall_s=wall,
-                           n_steps=self.n_steps,
+        return SweepResult(engine=config.sim_backend, scenarios=results,
+                           wall_s=wall, n_steps=self.n_steps,
                            model_update_wall_s=model_update_wall,
                            n_model_fits=n_model_fits,
                            forecast_update_wall_s=forecast_wall,
@@ -666,25 +484,29 @@ class SweepEngine:
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], *,
-              engine: str = "batched",
+              config: Optional[EngineConfig] = None,
+              engine: Optional[str] = None,
               model: Optional[ClusterModel] = None,
               hp: Optional[DemeterHyperParams] = None,
-              decision_interval_s: float = 60.0,
-              fit_backend: str = "bank",
-              forecast_backend: str = "bank") -> SweepResult:
+              decision_interval_s: Optional[float] = None,
+              fit_backend: Optional[str] = None,
+              forecast_backend: Optional[str] = None) -> SweepResult:
     """Execute a scenario grid in one invocation.
 
-    ``engine="batched"`` is the vectorized hot path; ``engine="scalar"`` is
-    the per-scenario SimJob reference oracle (identical orchestration).
-    ``fit_backend`` selects the Demeter GP fitting path: ``"bank"`` shares
-    one batched jitted model-update across all Demeter scenarios per
-    optimization interval, ``"scalar"`` is the per-GP scipy oracle.
-    ``forecast_backend`` selects the TSF path the same way: ``"bank"``
-    advances every Demeter scenario's forecaster in one shared batched
-    ForecastBank update per metric interval, ``"scalar"`` keeps one float64
-    NumPy forecaster per scenario (the reference oracle). Per-scenario
-    forecaster kinds come from :attr:`ScenarioSpec.forecaster`."""
-    return SweepEngine(specs, model=model, hp=hp,
-                       decision_interval_s=decision_interval_s,
-                       fit_backend=fit_backend,
-                       forecast_backend=forecast_backend).run(engine)
+    ``config`` is the unified :class:`~repro.core.executor.EngineConfig`:
+    ``sim_backend="batched"`` (default) is the vectorized hot path,
+    ``"scalar"`` the per-scenario SimJob reference oracle with identical
+    orchestration; ``fit_backend`` / ``forecast_backend`` pick the Demeter
+    GP-fit and TSF paths the same way (``"bank"`` shares one batched jitted
+    dispatch across all Demeter scenarios, ``"scalar"`` keeps the reference
+    oracles); per-scenario forecaster kinds come from
+    :attr:`ScenarioSpec.forecaster`.
+
+    The ``engine=`` / ``fit_backend=`` / ``forecast_backend=`` string
+    kwargs are deprecated shims for the same fields.
+    """
+    eng = SweepEngine(specs, config=config, model=model, hp=hp,
+                      decision_interval_s=decision_interval_s,
+                      fit_backend=fit_backend,
+                      forecast_backend=forecast_backend)
+    return eng.run(engine)

@@ -1,0 +1,423 @@
+"""Public-API surface tests for the batched control plane.
+
+* a golden snapshot of the exported names + key signatures of
+  ``repro.core`` and ``repro.dsp`` (additions are easy to whitelist;
+  accidental removals/renames fail loudly);
+* ``ScalarAdapter(DSPExecutor)`` pinned against the batched sweep executor
+  and round-tripped through ``ScenarioView``;
+* old-kwargs vs ``EngineConfig`` construction producing identical
+  ``SweepResult``s, with the deprecation warnings asserted;
+* registry behaviour (canonical errors, pluggable controllers).
+"""
+import inspect
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.dsp as dsp
+from repro.core import (CONTROLLERS, EngineConfig, Registry, ScalarAdapter,
+                        ScenarioView, coerce_config)
+from repro.core.demeter import DemeterController, DemeterHyperParams
+from repro.core.config_space import paper_flink_space
+from repro.dsp import (BatchedSweepExecutor, ClusterModel, DSPExecutor,
+                       JobConfig, NoFailures, ScalarSweepExecutor,
+                       ScenarioSpec, SweepEngine, make_trace, run_sweep,
+                       scenario_grid)
+
+# ---------------------------------------------------------------------------
+# golden API snapshot
+# ---------------------------------------------------------------------------
+
+CORE_EXPORTS = {
+    "ConfigSpace", "Parameter", "paper_flink_space", "tpu_serving_space",
+    "tpu_training_space", "GP", "GPBank", "batched_posterior", "OnlineARIMA",
+    "binned_forecast", "RGPEnsemble", "build_rgpe", "ehvi_2d",
+    "ehvi_2d_batch", "expected_improvement", "hypervolume_2d",
+    "pareto_front_2d", "pareto_front_mask_2d", "prob_feasible",
+    "select_profiling_batch", "LatencyConstraint", "MetricDetector",
+    "RecoveryTracker", "DemeterController", "DemeterHyperParams", "Executor",
+    "ModelBank", "SegmentStore", "Segment", "Observation", "USAGE", "LATENCY",
+    "RECOVERY", "METRICS", "FORECASTER_KINDS", "HoltWinters", "SeasonalNaive",
+    "make_scalar_forecaster", "BankedForecaster", "DetectorBank",
+    "ForecastBank", "make_forecaster",
+    "BatchExecutor", "EngineConfig", "ProfileSpec", "ScalarAdapter",
+    "ScenarioView", "coerce_config", "Registry", "CONTROLLERS",
+    "FORECASTERS", "FIT_BACKENDS", "FORECAST_BACKENDS", "DETECTOR_BACKENDS",
+    "SIM_ENGINES",
+}
+
+DSP_EXPORTS = {
+    "ClusterModel", "JobConfig", "SimJob", "BatchState", "MAX_PARALLELISM",
+    "measure_recovery", "Trace", "constant", "ysb_like", "tsw_like",
+    "diurnal", "flash_crowd", "regime_switching", "sinusoid_drift",
+    "make_trace", "TRACE_GENERATORS", "FailureSchedule", "NoFailures",
+    "PeriodicFailures", "FailuresAt",
+    "DSPExecutor", "ProfileCost", "StaticController", "ReactiveController",
+    "DS2Controller", "baseline_config", "run_experiment", "RunResult",
+    "FailureRecord",
+    "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
+    "scenario_grid", "paper_grid", "run_sweep",
+    "BatchedSweepExecutor", "ScalarSweepExecutor", "SweepExecutorBase",
+    "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
+}
+
+
+class TestApiSnapshot:
+    def test_core_exports(self):
+        assert set(core.__all__) == CORE_EXPORTS
+        missing = [n for n in core.__all__ if not hasattr(core, n)]
+        assert not missing
+
+    def test_dsp_exports(self):
+        assert set(dsp.__all__) == DSP_EXPORTS
+        missing = [n for n in dsp.__all__ if not hasattr(dsp, n)]
+        assert not missing
+
+    def test_run_sweep_signature(self):
+        params = inspect.signature(run_sweep).parameters
+        assert list(params) == ["specs", "config", "engine", "model", "hp",
+                                "decision_interval_s", "fit_backend",
+                                "forecast_backend"]
+        # everything after specs is keyword-only
+        assert all(p.kind is inspect.Parameter.KEYWORD_ONLY
+                   for n, p in params.items() if n != "specs")
+
+    def test_engine_config_fields(self):
+        params = inspect.signature(EngineConfig).parameters
+        assert list(params) == ["sim_backend", "fit_backend",
+                                "forecast_backend", "detector_backend",
+                                "hp", "decision_interval_s"]
+
+    def test_demeter_controller_signature(self):
+        params = inspect.signature(DemeterController).parameters
+        for name in ("space", "executor", "hp", "tsf", "fit_backend",
+                     "forecaster", "forecast_backend", "config"):
+            assert name in params
+
+    def test_batch_executor_protocol_members(self):
+        for method in ("n_scenarios", "cmax_config", "current_config",
+                       "reconfigure", "observe", "observe_one", "profile",
+                       "allocated_cost"):
+            assert hasattr(core.BatchExecutor, method)
+            for impl in (BatchedSweepExecutor, ScalarSweepExecutor,
+                         ScalarAdapter):
+                assert callable(getattr(impl, method)), \
+                    f"{impl.__name__} is missing {method}"
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation: one error surface
+# ---------------------------------------------------------------------------
+
+class TestEngineConfig:
+    def test_defaults_valid(self):
+        cfg = EngineConfig()
+        assert (cfg.sim_backend, cfg.fit_backend, cfg.forecast_backend,
+                cfg.detector_backend) == ("batched", "bank", "bank", "scalar")
+
+    @pytest.mark.parametrize("field,msg", [
+        ("sim_backend", "unknown engine"),
+        ("fit_backend", "unknown fit backend"),
+        ("forecast_backend", "unknown forecast backend"),
+        ("detector_backend", "unknown detector backend"),
+    ])
+    def test_rejects_unknown_backends_at_construction(self, field, msg):
+        with pytest.raises(ValueError, match=msg):
+            EngineConfig(**{field: "bogus"})
+
+    def test_rejects_nonpositive_cadence(self):
+        with pytest.raises(ValueError, match="decision_interval_s"):
+            EngineConfig(decision_interval_s=0.0)
+
+    def test_replace_revalidates(self):
+        with pytest.raises(ValueError, match="unknown fit backend"):
+            EngineConfig().replace(fit_backend="torch")
+
+    def test_mixing_config_and_legacy_kwargs_rejected(self):
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match="not both"):
+            run_sweep([spec], config=EngineConfig(), fit_backend="bank")
+
+    def test_mixing_config_and_engine_kwarg_rejected(self):
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match="not both"):
+            run_sweep([spec], config=EngineConfig(), engine="scalar")
+
+    def test_plugin_forecaster_rejected_eagerly_on_bank_backend(self):
+        # A registered plugin forecaster is valid for ScenarioSpec, but the
+        # shared ForecastBank only packs the built-in kinds: the engine must
+        # fail at construction, not deep inside the run.
+        from repro.core import FORECASTERS, OnlineARIMA
+        FORECASTERS.register("plugfc", OnlineARIMA)
+        try:
+            spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0),
+                                controller="demeter", forecaster="plugfc")
+            with pytest.raises(ValueError, match="forecast_backend='bank'"):
+                SweepEngine([spec], config=EngineConfig())
+            # the scalar TSF backend accepts it
+            SweepEngine([spec],
+                        config=EngineConfig(forecast_backend="scalar"))
+        finally:
+            FORECASTERS.unregister("plugfc")
+
+    def test_sweep_engine_validates_fit_backend_eagerly(self):
+        # Regression: an invalid fit_backend used to be accepted silently
+        # and only fail deep inside ModelBank once a Demeter policy ran.
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match="unknown fit backend"), \
+                warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            SweepEngine([spec], fit_backend="bogus")
+
+    def test_run_sweep_rejects_unknown_engine_with_listing(self):
+        spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
+        with pytest.raises(ValueError, match=r"available: \('batched', "
+                                             r"'scalar'\)"), \
+                warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            run_sweep([spec], engine="gpu")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+class TestLegacyKwargShims:
+    @pytest.fixture(scope="class")
+    def grid(self):
+        traces = [make_trace(k, duration_s=900.0, dt_s=5.0)
+                  for k in ("diurnal", "flash")]
+        return scenario_grid(traces, ("static", "reactive"), (0,))
+
+    def test_engine_kwarg_warns_and_matches_config(self, grid):
+        with pytest.warns(DeprecationWarning, match="'engine' kwarg"):
+            legacy = run_sweep(grid, engine="scalar")
+        new = run_sweep(grid, config=EngineConfig(sim_backend="scalar"))
+        assert legacy.engine == new.engine == "scalar"
+        for a, b in zip(legacy.scenarios, new.scenarios):
+            assert a.allclose(b)
+
+    def test_backend_kwargs_warn_and_match_config(self, grid):
+        with pytest.warns(DeprecationWarning, match="'fit_backend' kwarg"):
+            legacy = run_sweep(grid, fit_backend="scalar",
+                               forecast_backend="scalar")
+        new = run_sweep(grid, config=EngineConfig(fit_backend="scalar",
+                                                  forecast_backend="scalar"))
+        assert legacy.to_json()["scenarios"] == new.to_json()["scenarios"]
+
+    def test_forecast_backend_kwarg_warns(self, grid):
+        with pytest.warns(DeprecationWarning,
+                          match="'forecast_backend' kwarg"):
+            run_sweep(grid[:1], forecast_backend="bank")
+
+    def test_demeter_controller_legacy_kwargs_warn(self):
+        execu = DSPExecutor(ClusterModel(), JobConfig(), seed=0)
+        with pytest.warns(DeprecationWarning, match="'fit_backend' kwarg"):
+            ctl = DemeterController(paper_flink_space(), execu,
+                                    fit_backend="scalar")
+        assert ctl.config.fit_backend == "scalar"
+        assert ctl.bank.fit_backend == "scalar"
+
+    def test_config_path_emits_no_warnings(self, grid):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            run_sweep(grid[:1], config=EngineConfig())
+
+    def test_old_kwargs_vs_config_identical_sweep_result(self, grid):
+        """The acceptance pin: defaults spelled either way are bit-identical
+        (wall-clock fields excluded — they are nondeterministic timers)."""
+        with pytest.warns(DeprecationWarning):
+            legacy = run_sweep(grid, engine="batched", fit_backend="bank",
+                               forecast_backend="bank")
+        new = run_sweep(grid, config=EngineConfig())
+        a, b = legacy.to_json(), new.to_json()
+        for volatile in ("wall_s", "model_update_wall_s",
+                         "forecast_update_wall_s"):
+            a.pop(volatile), b.pop(volatile)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# ScalarAdapter / ScenarioView
+# ---------------------------------------------------------------------------
+
+def _fresh_executor(seed=0):
+    return DSPExecutor(ClusterModel(), JobConfig(), seed=seed, dt=5.0)
+
+
+class TestScalarAdapter:
+    def test_single_executor_wraps_as_batch_of_one(self):
+        ad = ScalarAdapter(_fresh_executor())
+        assert ad.n_scenarios() == 1
+        assert ad.cmax_config(0) == JobConfig().to_dict()
+
+    def test_observe_stacks_rows(self):
+        e0, e1 = _fresh_executor(0), _fresh_executor(1)
+        ad = ScalarAdapter([e0, e1])
+        for _ in range(12):
+            e0.step(40_000.0), e1.step(60_000.0)
+        batched = ad.observe()
+        for i, e in enumerate((e0, e1)):
+            scalar = e.observe()
+            assert set(batched) == set(scalar)
+            for k, v in scalar.items():
+                assert batched[k][i] == pytest.approx(v, rel=1e-12)
+        assert ad.observe_one(1) == e1.observe()
+
+    def test_reconfigure_masked_rows_only(self):
+        e0, e1 = _fresh_executor(0), _fresh_executor(1)
+        ad = ScalarAdapter([e0, e1])
+        small = dsp.baseline_config(4).to_dict()
+        applied = ad.reconfigure(np.array([False, True]), [small, small])
+        assert applied.tolist() == [False, True]
+        assert e0.current_config() == JobConfig().to_dict()
+        assert e1.current_config() == small
+
+    def test_profile_matches_direct_call(self):
+        # The adapter must forward one scalar profile() call per contiguous
+        # (idx, rate) run, so per-call clone seeds are preserved.
+        cfgs = [dsp.baseline_config(4).to_dict(),
+                dsp.baseline_config(8).to_dict()]
+        direct = _fresh_executor(3).profile(cfgs, 40_000.0)
+        ad = ScalarAdapter(_fresh_executor(3))
+        via = ad.profile([(0, c, 40_000.0) for c in cfgs])
+        assert len(direct) == len(via) == 2
+        for d, v in zip(direct, via):
+            assert (d is None) == (v is None)
+            if d is not None:
+                for k in d:
+                    assert v[k] == pytest.approx(d[k], rel=1e-12)
+
+    def test_profile_noncontiguous_specs_get_distinct_seeds(self):
+        # Interleaved requests for the same (idx, rate) must land in ONE
+        # wrapped profile() call so the clones draw distinct seeds — two
+        # identical configs at different positions would otherwise simulate
+        # identical noise.
+        cfg = dsp.baseline_config(4).to_dict()
+        other = dsp.baseline_config(8).to_dict()
+        direct = _fresh_executor(7).profile([cfg, cfg], 40_000.0)
+        ad = ScalarAdapter([_fresh_executor(7), _fresh_executor(8)])
+        via = ad.profile([(0, cfg, 40_000.0), (1, other, 40_000.0),
+                          (0, cfg, 40_000.0)])
+        assert via[0] is not None and via[2] is not None
+        # positions 0 and 2 mirror the direct two-config call (seeds 0, 1)
+        for d, v in zip(direct, (via[0], via[2])):
+            for k in d:
+                assert v[k] == pytest.approx(d[k], rel=1e-12)
+
+    def test_scenario_view_roundtrips_scalar_protocol(self):
+        execu = _fresh_executor(0)
+        view = ScenarioView(ScalarAdapter(execu), 0)
+        for _ in range(12):
+            execu.step(40_000.0)
+        assert view.cmax_config() == execu.cmax_config()
+        assert view.current_config() == execu.current_config()
+        assert view.observe() == execu.observe()
+        cfg = dsp.baseline_config(6).to_dict()
+        assert view.allocated_cost(cfg) == execu.allocated_cost(cfg)
+        view.reconfigure(cfg)
+        assert execu.current_config() == cfg
+
+    def test_adapter_against_batched_sweep_executor(self):
+        """ScalarAdapter(DSPExecutor) and BatchedSweepExecutor expose the
+        same control plane over the same simulated job."""
+        n_steps, dt = 24, 5.0
+        execu = DSPExecutor(ClusterModel(), JobConfig(), seed=0, dt=dt)
+        adapter = ScalarAdapter(execu)
+        batched = BatchedSweepExecutor(ClusterModel(), [JobConfig()], [0],
+                                       dt=dt, n_steps=n_steps)
+        for _ in range(n_steps):
+            execu.step(45_000.0)
+            batched.step(np.array([45_000.0]))
+        a, b = adapter.observe_one(0), batched.observe_one(0)
+        assert set(a) == set(b) == {"rate", "latency", "usage"}
+        for k in a:
+            assert a[k] == pytest.approx(b[k], rel=1e-12)
+        cfg = dsp.baseline_config(6).to_dict()
+        assert adapter.allocated_cost(0, cfg) == batched.allocated_cost(0, cfg)
+        assert adapter.cmax_config(0) == batched.cmax_config(0)
+        # batched observe() agrees with its per-row digest
+        arr = batched.observe()
+        for k in b:
+            assert arr[k][0] == pytest.approx(b[k], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_duplicate_registration_rejected(self):
+        r = Registry("thing")
+        r.register("a", 1)
+        with pytest.raises(ValueError, match="already registered"):
+            r.register("a", 2)
+        r.register("a", 2, override=True)
+        assert r.get("a") == 2
+
+    def test_canonical_error_shape(self):
+        r = Registry("gizmo")
+        r.register("x", object())
+        with pytest.raises(ValueError,
+                           match=r"unknown gizmo 'y'; available: \('x',\)"):
+            r.get("y")
+
+    def test_third_party_controller_runs_through_sweep(self):
+        from repro.dsp.policies import BaselinePolicy
+        from repro.dsp.baselines import StaticController
+
+        @CONTROLLERS.register("frozen")
+        class FrozenPolicy(BaselinePolicy):
+            """A pluggable do-nothing controller (pinned start config)."""
+
+            @classmethod
+            def start_config_for(cls, spec, config):
+                return dsp.baseline_config(3)
+
+            def __init__(self, eng, idx, spec, config, tsf=None):
+                self.ctl = StaticController(dsp.baseline_config(3))
+                self.start_config = dsp.baseline_config(3)
+
+        try:
+            spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=600.0,
+                                                 dt_s=5.0),
+                                controller="frozen", failures=NoFailures())
+            res = run_sweep([spec], config=EngineConfig())
+            assert res.scenarios[0].workers.max() == 3
+            assert res.scenarios[0].n_reconfigurations == 0
+            ref = run_sweep([spec],
+                            config=EngineConfig(sim_backend="scalar"))
+            assert res.scenarios[0].allclose(ref.scenarios[0])
+        finally:
+            CONTROLLERS.unregister("frozen")
+
+    def test_unknown_controller_error_lists_available(self):
+        with pytest.raises(ValueError, match="unknown controller"):
+            ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0),
+                         controller="nope")
+
+
+# ---------------------------------------------------------------------------
+# coerce_config unit behaviour
+# ---------------------------------------------------------------------------
+
+class TestCoerceConfig:
+    def test_no_args_yields_defaults(self):
+        assert coerce_config() == EngineConfig()
+
+    def test_legacy_folds_in_with_warning(self):
+        with pytest.warns(DeprecationWarning):
+            cfg = coerce_config(engine="scalar", fit_backend="scalar")
+        assert cfg.sim_backend == "scalar"
+        assert cfg.fit_backend == "scalar"
+
+    def test_hp_and_cadence_fold_in_silently(self):
+        hp = DemeterHyperParams(forecast_horizon=7)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            cfg = coerce_config(hp=hp, decision_interval_s=30.0)
+        assert cfg.hp is hp
+        assert cfg.decision_interval_s == 30.0
+        assert cfg.resolved_hp().forecast_horizon == 7

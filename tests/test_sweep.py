@@ -3,9 +3,12 @@ failure schedules, grid construction."""
 import numpy as np
 import pytest
 
+from repro.core import EngineConfig
 from repro.dsp import (BatchState, ClusterModel, FailuresAt, JobConfig,
                        NoFailures, PeriodicFailures, ScenarioSpec, SimJob,
                        TRACE_GENERATORS, make_trace, run_sweep, scenario_grid)
+
+SCALAR = EngineConfig(sim_backend="scalar")
 from repro.dsp.simulator import BatchedNormals, BufferedNormals
 
 MODEL = ClusterModel()
@@ -114,15 +117,15 @@ class TestSweepEquivalence:
         assert len({s.name for s in grid}) == 12
 
     def test_batched_matches_scalar(self, grid):
-        batched = run_sweep(grid, engine="batched")
-        scalar = run_sweep(grid, engine="scalar")
+        batched = run_sweep(grid)
+        scalar = run_sweep(grid, config=SCALAR)
         assert len(batched.scenarios) == len(scalar.scenarios) == len(grid)
         for a, b in zip(batched.scenarios, scalar.scenarios):
             assert a.name == b.name
             assert a.allclose(b), f"{a.name} diverged between engines"
 
     def test_failures_injected_and_summarized(self, grid):
-        res = run_sweep(grid, engine="batched")
+        res = run_sweep(grid)
         for sc in res.scenarios:
             assert len(sc.failures) == 2  # 420 s cadence over 1200 s
             s = sc.summary()
@@ -130,7 +133,7 @@ class TestSweepEquivalence:
             assert len(s["recoveries_s"]) == 2
 
     def test_reactive_actually_reconfigures(self, grid):
-        res = run_sweep(grid, engine="batched").by_name()
+        res = run_sweep(grid).by_name()
         assert any(r.n_reconfigurations > 0 for r in res.values()
                    if r.controller == "reactive")
         assert all(r.n_reconfigurations == 0 for r in res.values()
@@ -140,7 +143,7 @@ class TestSweepEquivalence:
         short = make_trace("diurnal", duration_s=600.0, dt_s=5.0)
         long = make_trace("flash", duration_s=1200.0, dt_s=5.0)
         specs = [ScenarioSpec(trace=short), ScenarioSpec(trace=long)]
-        res = run_sweep(specs, engine="batched")
+        res = run_sweep(specs)
         assert len(res.scenarios[0].times) == 120
         assert len(res.scenarios[1].times) == 240
 
@@ -149,10 +152,14 @@ class TestSweepEquivalence:
             ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0),
                          controller="nope")
 
+    @pytest.mark.filterwarnings("ignore::DeprecationWarning")
     def test_rejects_unknown_engine(self):
+        # legacy engine= kwarg path (shim coverage lives in test_api.py)
         spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
         with pytest.raises(ValueError, match="unknown engine"):
             run_sweep([spec], engine="gpu")
+        with pytest.raises(ValueError, match="unknown engine"):
+            run_sweep([spec], config=EngineConfig(sim_backend="gpu"))
 
     def test_rejects_empty_grid(self):
         with pytest.raises(ValueError, match="empty"):
@@ -171,8 +178,8 @@ class TestDemeterInSweep:
         trace = make_trace("diurnal", duration_s=1800.0, dt_s=5.0)
         specs = [ScenarioSpec(trace=trace, controller="demeter", seed=0,
                               failures=NoFailures())]
-        batched = run_sweep(specs, engine="batched")
-        scalar = run_sweep(specs, engine="scalar")
+        batched = run_sweep(specs)
+        scalar = run_sweep(specs, config=SCALAR)
         assert batched.scenarios[0].allclose(scalar.scenarios[0])
 
 
@@ -196,8 +203,9 @@ class TestForecastBackend:
         ]
 
     def test_bank_matches_scalar_forecast_backend(self, demeter_specs):
-        bank = run_sweep(demeter_specs, forecast_backend="bank")
-        scal = run_sweep(demeter_specs, forecast_backend="scalar")
+        bank = run_sweep(demeter_specs, config=EngineConfig(forecast_backend="bank"))
+        scal = run_sweep(demeter_specs,
+                         config=EngineConfig(forecast_backend="scalar"))
         for a, b in zip(bank.scenarios, scal.scenarios):
             assert a.allclose(b), f"{a.name} diverged between TSF backends"
         assert bank.n_forecast_updates == scal.n_forecast_updates > 0
@@ -205,22 +213,28 @@ class TestForecastBackend:
         assert scal.forecast_update_wall_s > 0
 
     def test_bank_backend_engine_equivalence(self, demeter_specs):
-        batched = run_sweep(demeter_specs, forecast_backend="bank")
-        scalar = run_sweep(demeter_specs, engine="scalar",
-                           forecast_backend="bank")
+        batched = run_sweep(demeter_specs, config=EngineConfig(forecast_backend="bank"))
+        scalar = run_sweep(demeter_specs,
+                           config=EngineConfig(sim_backend="scalar",
+                                               forecast_backend="bank"))
         for a, b in zip(batched.scenarios, scalar.scenarios):
             assert a.allclose(b), f"{a.name} diverged between sim engines"
 
     def test_forecast_counters_in_json(self, demeter_specs):
-        res = run_sweep(demeter_specs[:1], forecast_backend="bank")
+        res = run_sweep(demeter_specs[:1],
+                        config=EngineConfig(forecast_backend="bank"))
         js = res.to_json()
         assert js["n_forecast_updates"] == res.n_forecast_updates > 0
         assert js["forecast_update_wall_s"] >= 0
 
+    @pytest.mark.filterwarnings("ignore::DeprecationWarning")
     def test_rejects_unknown_forecast_backend(self):
+        # legacy kwarg path (shim coverage lives in test_api.py)
         spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
         with pytest.raises(ValueError, match="unknown forecast backend"):
             run_sweep([spec], forecast_backend="gpu")
+        with pytest.raises(ValueError, match="unknown forecast backend"):
+            run_sweep([spec], config=EngineConfig(forecast_backend="gpu"))
 
     def test_rejects_unknown_forecaster(self):
         with pytest.raises(ValueError, match="unknown forecaster"):
@@ -300,7 +314,7 @@ class TestFailureSchedules:
         # overwrite each other's records
         tr = make_trace("diurnal", duration_s=900.0, dt_s=5.0)
         spec = ScenarioSpec(trace=tr, failures=FailuresAt(100.0, 150.0, 200.0))
-        res = run_sweep([spec], engine="batched")
+        res = run_sweep([spec])
         assert len(res.scenarios[0].failures) == 3
         assert res.scenarios[0].summary()["n_failures_injected"] == 3
 
