@@ -149,10 +149,11 @@ def sweep_main(args: argparse.Namespace) -> None:
           f"({len(traces)} traces x {len(args.controllers)} controllers "
           f"x {len(args.seeds)} seeds), {args.duration_h:g}h @ dt={args.dt:g}s")
 
-    config = EngineConfig(fit_backend=args.fit_backend,
+    config = EngineConfig(sim_backend=args.engine, devices=args.devices,
+                          fit_backend=args.fit_backend,
                           forecast_backend=args.forecast_backend)
     batched = run_sweep(specs, config=config)
-    print(f"# batched engine: {batched.wall_s:.2f}s wall "
+    print(f"# {batched.engine} engine: {batched.wall_s:.2f}s wall "
           f"({batched.n_steps} steps x {len(specs)} scenarios)")
     if batched.n_model_fits:
         print(f"# model updates ({args.fit_backend}): "
@@ -170,7 +171,7 @@ def sweep_main(args: argparse.Namespace) -> None:
                       if not a.allclose(b)]
         print(f"# scalar reference: {scalar.wall_s:.2f}s wall -> "
               f"speedup {scalar.wall_s / max(batched.wall_s, 1e-9):.2f}x")
-        print(f"# batched-vs-scalar equivalence: "
+        print(f"# {batched.engine}-vs-scalar equivalence: "
               f"{'OK' if not mismatched else 'MISMATCH ' + str(mismatched)}")
 
     os.makedirs(args.out, exist_ok=True)
@@ -221,6 +222,17 @@ def main() -> None:
     sw.add_argument("--compare-scalar", action="store_true",
                     help="also run the scalar reference oracle; verify "
                          "equivalence and report the wall-clock speedup")
+    sw.add_argument("--engine", choices=("batched", "scalar", "sharded"),
+                    default="batched",
+                    help="simulation engine: single-device vectorized "
+                         "(default), per-scenario reference oracle, or "
+                         "device-sharded (needs >= 2 visible devices; on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N — see docs/SCALING.md)")
+    sw.add_argument("--devices", type=int, default=None,
+                    help="scenario-mesh width for --engine sharded and the "
+                         "shared GP/forecast banks (default: all visible "
+                         "devices)")
     sw.add_argument("--fit-backend", choices=("bank", "scalar"),
                     default="bank",
                     help="Demeter GP fitting path: batched jitted GPBank "

@@ -31,6 +31,13 @@ def main() -> None:
                     help="comma-separated forecaster kinds "
                          f"({','.join(FORECASTER_KINDS)}), cycled across "
                          "scenarios")
+    ap.add_argument("--engine", choices=("batched", "scalar", "sharded"),
+                    default="batched",
+                    help="simulation engine; 'sharded' lays the scenario "
+                         "axis over a device mesh (needs >= 2 visible "
+                         "devices; see docs/SCALING.md)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="scenario-mesh width (default: all visible)")
     ap.add_argument("--verify", action="store_true",
                     help="also run the scalar oracle and check equivalence")
     args = ap.parse_args()
@@ -48,9 +55,10 @@ def main() -> None:
     print(f"== sweep: {len(specs)} scenarios, {args.hours:g} h each, "
           f"failures every 45 min ==")
 
-    config = EngineConfig(forecast_backend=args.forecast_backend)
+    config = EngineConfig(sim_backend=args.engine, devices=args.devices,
+                          forecast_backend=args.forecast_backend)
     res = run_sweep(specs, config=config)
-    print(f"batched engine: {res.wall_s:.2f} s wall for "
+    print(f"{res.engine} engine: {res.wall_s:.2f} s wall for "
           f"{res.n_steps} steps x {len(specs)} scenarios\n")
 
     print(f"{'scenario':28s} {'p50 lat':>8s} {'<2s':>7s} "

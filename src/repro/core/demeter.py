@@ -77,23 +77,31 @@ FIT_MAX_ITER = 60
 
 
 #: The registered fit backends share one signature:
-#: ``fitter(datasets, seeds) -> list[GP]`` where ``datasets`` is a sequence
-#: of ``(x, y)`` training pairs and ``seeds`` the per-model restart seeds.
+#: ``fitter(datasets, seeds, devices=None) -> list[GP]`` where ``datasets``
+#: is a sequence of ``(x, y)`` training pairs, ``seeds`` the per-model
+#: restart seeds and ``devices`` an optional scenario-mesh width (only
+#: passed when a caller sets it, so third-party fitters without the kwarg
+#: keep working in the default layout).
 
 @FIT_BACKENDS.register("scalar")
 def _fit_scalar(datasets: Sequence[Tuple[np.ndarray, np.ndarray]],
-                seeds: Sequence[int]) -> List[GP]:
-    """Per-GP scipy L-BFGS-B loop (the reference oracle)."""
+                seeds: Sequence[int],
+                devices: Optional[int] = None) -> List[GP]:
+    """Per-GP scipy L-BFGS-B loop (the reference oracle; ``devices`` is an
+    execution-layout hint with nothing to act on here)."""
     return [GP.fit(x, y, restarts=FIT_RESTARTS, max_iter=FIT_MAX_ITER, seed=s)
             for (x, y), s in zip(datasets, seeds)]
 
 
 @FIT_BACKENDS.register("bank")
 def _fit_bank(datasets: Sequence[Tuple[np.ndarray, np.ndarray]],
-              seeds: Sequence[int]) -> List[GP]:
-    """Every dataset in one vmapped, jitted GPBank L-BFGS dispatch."""
+              seeds: Sequence[int],
+              devices: Optional[int] = None) -> List[GP]:
+    """Every dataset in one vmapped, jitted GPBank L-BFGS dispatch,
+    optionally sharded over a ``devices``-wide scenario mesh."""
     bank = GPBank.fit(list(datasets), restarts=FIT_RESTARTS,
-                      max_iter=FIT_MAX_ITER, seeds=list(seeds))
+                      max_iter=FIT_MAX_ITER, seeds=list(seeds),
+                      devices=devices)
     return [bank.member(i) for i in range(len(datasets))]
 
 
@@ -123,6 +131,9 @@ class ModelBank:
     max_base_models: int = 4
     refit_growth: float = 0.10           # refit when data grew >= 10 %
     fit_backend: str = "bank"            # "bank" | "scalar"
+    #: scenario-mesh width for batched fits (EngineConfig.devices); None
+    #: keeps the default single-device dispatch
+    fit_devices: Optional[int] = None
     fit_wall_s: float = 0.0
     n_fits: int = 0
     _gps: Dict[Tuple[int, str], Tuple[int, int, Optional[GP]]] = field(
@@ -168,7 +179,8 @@ class ModelBank:
         x, y = payload
         t0 = time.perf_counter()
         fitter = FIT_BACKENDS.get(self.fit_backend)
-        g = fitter([(x, y)], [self._seed(segment, metric)])[0]
+        kw = {"devices": self.fit_devices} if self.fit_devices else {}
+        g = fitter([(x, y)], [self._seed(segment, metric)], **kw)[0]
         self.fit_wall_s += time.perf_counter() - t0
         self.n_fits += 1
         self._install(segment, metric, len(y), g)
@@ -216,14 +228,18 @@ class ModelBank:
         if not jobs:
             return 0, time.perf_counter() - t0
 
-        by_backend: Dict[str, List] = {}
+        # One fitter call per (backend, device-layout) group: banks sharing
+        # a backend but disagreeing on mesh width must not be merged.
+        by_backend: Dict[Tuple[str, Optional[int]], List] = {}
         for job in jobs:
-            by_backend.setdefault(job[0].fit_backend, []).append(job)
-        for backend, group in by_backend.items():
+            key = (job[0].fit_backend, job[0].fit_devices)
+            by_backend.setdefault(key, []).append(job)
+        for (backend, devices), group in by_backend.items():
             fitter = FIT_BACKENDS.get(backend)
+            kw = {"devices": devices} if devices else {}
             gps = fitter([(x, y) for _, _, _, x, y in group],
                          [b._seed(seg, metric)
-                          for b, seg, metric, _, _ in group])
+                          for b, seg, metric, _, _ in group], **kw)
             for (b, seg, metric, _x, y), g in zip(group, gps):
                 b._install(seg, metric, len(y), g)
         return len(jobs), time.perf_counter() - t0
@@ -243,7 +259,8 @@ class ModelBank:
             if len(base) >= self.max_base_models:
                 break
         return build_rgpe(target_gp, tx, ty, base,
-                          seed=segment.index * 7919 + _metric_salt(metric))
+                          seed=segment.index * 7919 + _metric_salt(metric),
+                          devices=self.fit_devices)
 
 
 @dataclass
@@ -298,7 +315,8 @@ class DemeterController:
                                        backend=self.forecast_backend,
                                        horizon=self.hp.forecast_horizon)
         self.store = SegmentStore(self.hp.segment_size)
-        self.bank = ModelBank(self.store, fit_backend=self.fit_backend)
+        self.bank = ModelBank(self.store, fit_backend=self.fit_backend,
+                              fit_devices=self.config.devices)
         self._candidates = self.space.matrix()
         self._configs = self.space.enumerate()
         self._alloc = np.asarray(

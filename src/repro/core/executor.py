@@ -286,6 +286,13 @@ class EngineConfig:
     hp: Optional["DemeterHyperParams"] = None
     #: Baseline-controller decision cadence (seconds).
     decision_interval_s: float = 60.0
+    #: Width of the ``scenario`` device mesh: how many JAX devices the
+    #: sharded engine and the GP/forecast banks lay the scenario axis over.
+    #: ``None`` = all visible devices for ``sim_backend="sharded"``,
+    #: single-device dispatches for the banks. Validated against the
+    #: visible device count at construction (see docs/SCALING.md for
+    #: running multi-device on one CPU).
+    devices: Optional[int] = None
 
     def __post_init__(self) -> None:
         _ensure_registered()
@@ -297,6 +304,39 @@ class EngineConfig:
         if not self.decision_interval_s > 0:
             raise ValueError(f"decision_interval_s must be positive, got "
                              f"{self.decision_interval_s!r}")
+        self._validate_devices()
+
+    def _validate_devices(self) -> None:
+        """One error surface for device placement, at construction.
+
+        Without this, a bad ``devices`` (or ``sim_backend="sharded"`` on a
+        single-device host) would only surface as a deep XLA sharding error
+        once the sweep engine builds its mesh.
+        """
+        if self.devices is not None and (
+                not isinstance(self.devices, int)
+                or isinstance(self.devices, bool) or self.devices < 1):
+            raise ValueError(f"devices must be a positive int or None, "
+                             f"got {self.devices!r}")
+        if self.devices is None and self.sim_backend != "sharded":
+            return                       # nothing touches a mesh; stay lazy
+        import jax
+
+        from ..distributed.mesh import device_count_hint
+        visible = jax.device_count()
+        if self.devices is not None and self.devices > visible:
+            raise ValueError(
+                f"devices={self.devices} requested but only {visible} JAX "
+                f"device(s) visible; {device_count_hint()}")
+        width = self.devices if self.devices is not None else visible
+        if self.sim_backend == "sharded" and width < 2:
+            cause = (f"devices={self.devices} was requested"
+                     if self.devices is not None
+                     else f"only {visible} device(s) are visible")
+            raise ValueError(
+                f"sim_backend 'sharded' needs at least 2 devices to shard "
+                f"the scenario axis, but {cause}; {device_count_hint()}, "
+                f"or use sim_backend='batched' (the single-device engine)")
 
     def resolved_hp(self) -> "DemeterHyperParams":
         """``hp``, or the paper §3.2 defaults when unset."""

@@ -424,15 +424,45 @@ class _FamilyBank:
     ~10 ticks on top of the cross-stream batching.
     """
 
-    def __init__(self, rows: Sequence[dict], use_pallas: bool = False):
+    def __init__(self, rows: Sequence[dict], use_pallas: bool = False,
+                 devices: Optional[int] = None):
         self.n = len(rows)
         self.b = bucket_pow2(self.n, minimum=1)
         self.use_pallas = use_pallas
+        # Optional scenario-mesh layout: the stream axis is padded to the
+        # mesh size and every state/param array is laid out with
+        # NamedSharding(mesh, P("scenario", ...)), so the chunked lax.scan
+        # dispatches partition across devices (streams are independent —
+        # no collectives). None = single-device (the default placement).
+        self._mesh = None
+        if devices is not None and devices > 1:
+            from ..distributed.mesh import pad_to_multiple, scenario_mesh
+            self._mesh = scenario_mesh(devices)
+            self.b = pad_to_multiple(self.b, int(self._mesh.devices.size))
         # Per-stream staging queues (plain lists: appends are the per-tick
         # hot path; the padded array is only built per flush).
         self._q: List[List[float]] = [[] for _ in range(self.b)]
         with enable_x64():
             self.state, self.params = self._build(list(rows))
+            if self._mesh is not None:
+                self.state = self._shard_streams(self.state)
+                self.params = self._shard_streams(self.params)
+
+    def _shard_streams(self, tree):
+        """Lay a NamedTuple of ``[B, ...]`` arrays out over the mesh."""
+        from ..distributed.mesh import scenario_sharding
+        return jax.tree.map(
+            lambda a: jax.device_put(
+                a, scenario_sharding(self._mesh, np.ndim(a))), tree)
+
+    def _chunk_to_device(self, vals: np.ndarray) -> jnp.ndarray:
+        """Stage a (T, B) chunk; stream axis sharded to match the state."""
+        if self._mesh is None:
+            return jnp.asarray(vals)
+        from jax.sharding import NamedSharding, PartitionSpec
+        from ..distributed.mesh import SCENARIO
+        return jax.device_put(
+            vals, NamedSharding(self._mesh, PartitionSpec(None, SCENARIO)))
 
     # family-specific
     def _build(self, rows: List[dict]):
@@ -485,7 +515,7 @@ class _FamilyBank:
             return 0
         n, vals = self._take_chunk()
         with enable_x64():
-            self.state = self._chunk(jnp.asarray(vals))
+            self.state = self._chunk(self._chunk_to_device(vals))
         return n
 
     def flush_and_roll(self, steps: int) -> Tuple[int, np.ndarray]:
@@ -494,7 +524,8 @@ class _FamilyBank:
             return 0, self.rollout(steps)
         n, vals = self._take_chunk()
         with enable_x64():
-            self.state, out = self._chunk_roll(jnp.asarray(vals), steps)
+            self.state, out = self._chunk_roll(self._chunk_to_device(vals),
+                                               steps)
         return n, np.asarray(out)
 
     def rollout(self, steps: int) -> np.ndarray:
@@ -682,7 +713,8 @@ class ForecastBank:
 
     def __init__(self, kinds: Sequence[str],
                  params: Optional[Sequence[dict]] = None,
-                 horizon: int = 10, use_pallas: bool = False):
+                 horizon: int = 10, use_pallas: bool = False,
+                 devices: Optional[int] = None):
         if not kinds:
             raise ValueError("ForecastBank needs at least one stream")
         params = list(params) if params is not None else [{}] * len(kinds)
@@ -703,7 +735,8 @@ class ForecastBank:
             for i, (row, _) in enumerate(members):
                 self._rows[row] = (kind, i)
             self._fams[kind] = _FAMILY_BANKS[kind](
-                [kw for _, kw in members], use_pallas=use_pallas)
+                [kw for _, kw in members], use_pallas=use_pallas,
+                devices=devices)
         self._cache: Dict[str, np.ndarray] = {}
         #: wall-clock spent in batched update / rollout dispatches
         self.update_wall_s = 0.0
@@ -713,10 +746,10 @@ class ForecastBank:
     @classmethod
     def from_kinds(cls, kinds: Sequence[str], *,
                    params: Optional[Sequence[dict]] = None,
-                   horizon: int = 10, use_pallas: bool = False
-                   ) -> "ForecastBank":
+                   horizon: int = 10, use_pallas: bool = False,
+                   devices: Optional[int] = None) -> "ForecastBank":
         return cls(kinds, params=params, horizon=horizon,
-                   use_pallas=use_pallas)
+                   use_pallas=use_pallas, devices=devices)
 
     @property
     def n_streams(self) -> int:

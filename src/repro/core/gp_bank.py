@@ -53,6 +53,29 @@ def bucket_pow2(n: int, minimum: int = 8) -> int:
 _bucket = bucket_pow2
 
 
+def _member_layout(b: int, devices: Optional[int]):
+    """Resolve the member-axis layout for a packed bank of ``b`` members.
+
+    ``devices=None`` (or 1) keeps the default single-device placement and
+    returns ``(b, None)``. Otherwise the member axis is padded to the
+    ``scenario`` mesh size and the returned ``put`` callable lays a packed
+    ``[B, ...]`` array out with ``NamedSharding(mesh, P("scenario", ...))``
+    — members are independent, so the vmapped fit/posterior dispatches
+    partition across devices with no collectives.
+    """
+    if devices is None or devices <= 1:
+        return b, None
+    from ..distributed.mesh import (pad_to_multiple, scenario_mesh,
+                                    scenario_sharding)
+    mesh = scenario_mesh(devices)
+    b = pad_to_multiple(b, int(mesh.devices.size))
+
+    def put(a: np.ndarray) -> jnp.ndarray:
+        return jax.device_put(a, scenario_sharding(mesh, np.ndim(a)))
+
+    return b, put
+
+
 # --------------------------------------------------------------------------
 # masked objective (identical to gp._neg_mll on the real block)
 # --------------------------------------------------------------------------
@@ -183,12 +206,18 @@ class GPBank:
     def fit(datasets: Sequence[Tuple[np.ndarray, np.ndarray]], *,
             restarts: int = DEFAULT_RESTARTS,
             seeds: Optional[Sequence[int]] = None,
-            max_iter: int = DEFAULT_MAX_ITER) -> "GPBank":
+            max_iter: int = DEFAULT_MAX_ITER,
+            devices: Optional[int] = None) -> "GPBank":
         """Fit one GP per ``(x, y)`` dataset in a single jitted batch.
 
         ``seeds`` controls each member's restart initializations and matches
         :meth:`GP.fit`'s draws, so member ``i`` optimizes from the same
         starting points as ``GP.fit(x_i, y_i, seed=seeds[i])``.
+
+        ``devices`` shards the member axis over a ``scenario`` mesh of that
+        many devices (padding the batch to the mesh size), so a sweep's
+        shared model-update scales with device count; members fit
+        independently, so results do not depend on the layout.
         """
         if not datasets:
             raise ValueError("GPBank.fit needs at least one dataset")
@@ -208,6 +237,7 @@ class GPBank:
         # dummy single-point datasets sliced off before returning.
         n_real = len(datasets)
         b = _bucket(n_real, minimum=1)
+        b, put = _member_layout(b, devices)
         n_max = _bucket(max(len(y) for _, y in datasets))
 
         xs = np.zeros((b, n_max, dim))
@@ -228,9 +258,9 @@ class GPBank:
             mask[i, :n] = 1.0
             t0s[i] = restart_inits(dim, restarts, seeds[i])
 
+        pack = put if put is not None else jnp.asarray
         theta, _val, chol, alpha = _fit_packed(
-            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask),
-            jnp.asarray(t0s), max_iter=max_iter)
+            pack(xs), pack(ys), pack(mask), pack(t0s), max_iter=max_iter)
         keep = slice(0, n_real)
         return GPBank(x=xs[keep], mask=mask[keep],
                       theta=np.asarray(theta)[keep],
@@ -274,7 +304,8 @@ class GPBank:
         return [self.member(i) for i in range(self.n_members)]
 
 
-def batched_posterior(gps: Sequence[GP], xq: np.ndarray
+def batched_posterior(gps: Sequence[GP], xq: np.ndarray,
+                      devices: Optional[int] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Posterior mean/variance of arbitrary fitted GPs at a shared grid.
 
@@ -282,12 +313,15 @@ def batched_posterior(gps: Sequence[GP], xq: np.ndarray
     padded arrays and evaluates all posteriors in one jitted call. Returns
     two (len(gps), m) arrays. This is the RGPE/controller fast path: every
     ensemble member is predicted in one dispatch instead of a Python loop.
+    ``devices`` shards the member axis over a ``scenario`` mesh (the query
+    grid is replicated), like :meth:`GPBank.fit`.
     """
     if not gps:
         raise ValueError("batched_posterior needs at least one GP")
     dim = gps[0].x.shape[1]
     xq = np.asarray(xq, np.float64).reshape(-1, dim)
     b = _bucket(len(gps), minimum=1)
+    b, put = _member_layout(b, devices)
     n_max = _bucket(max(len(g.alpha) for g in gps))
     xs = np.zeros((b, n_max, dim))
     mask = np.zeros((b, n_max))
@@ -302,9 +336,10 @@ def batched_posterior(gps: Sequence[GP], xq: np.ndarray
         chol[i, :n, :n] = g.chol
         chol[i, n:, :n] = 0.0
         alpha[i, :n] = g.alpha
+    pack = put if put is not None else jnp.asarray
     mean_s, var_s = _posterior_packed(
-        jnp.asarray(xs), jnp.asarray(mask), jnp.asarray(theta),
-        jnp.asarray(chol), jnp.asarray(alpha), jnp.asarray(xq))
+        pack(xs), pack(mask), pack(theta), pack(chol), pack(alpha),
+        jnp.asarray(xq))
     y_std = np.asarray([g.y_std for g in gps])
     y_mean = np.asarray([g.y_mean for g in gps])
     mean = np.asarray(mean_s)[:len(gps)] * y_std[:, None] + y_mean[:, None]

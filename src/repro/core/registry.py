@@ -131,8 +131,8 @@ FORECAST_BACKENDS: Registry = Registry("forecast backend")
 #: Anomaly-detector backends ("scalar" / "bank") for RecoveryTracker.
 DETECTOR_BACKENDS: Registry = Registry("detector backend")
 
-#: Sweep simulation engines ("batched" / "scalar"). Entries are sweep
-#: executor classes — :class:`~repro.core.executor.BatchExecutor`
+#: Sweep simulation engines ("batched" / "scalar" / "sharded"). Entries are
+#: sweep executor classes — :class:`~repro.core.executor.BatchExecutor`
 #: implementations that additionally provide the simulation-stepping
 #: surface; subclass :class:`repro.dsp.executor.SweepExecutorBase`.
 SIM_ENGINES: Registry = Registry("engine")

@@ -46,10 +46,17 @@ def _ranking_loss(pred: np.ndarray, target: np.ndarray) -> np.ndarray:
 
 @dataclass
 class RGPEnsemble:
-    """Weighted GP mixture with the paper's mean/variance combination rule."""
+    """Weighted GP mixture with the paper's mean/variance combination rule.
+
+    ``devices`` optionally shards the batched member-posterior dispatch
+    over a ``scenario`` device mesh (see
+    :func:`repro.core.gp_bank.batched_posterior`); ``None`` keeps the
+    default single-device placement.
+    """
 
     gps: List[GP]
     weights: np.ndarray
+    devices: Optional[int] = None
 
     def posterior(self, xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         xq = np.atleast_2d(np.asarray(xq, np.float64))
@@ -61,7 +68,8 @@ class RGPEnsemble:
             m, v = gp.posterior(xq)
             return a * m, np.maximum((a * a) * v, 1e-12)
         # All members in one jitted dispatch, then the paper's mixture rule.
-        mus, vars_ = batched_posterior([gp for gp, _ in active], xq)
+        mus, vars_ = batched_posterior([gp for gp, _ in active], xq,
+                                       devices=self.devices)
         w = np.asarray([a for _, a in active])
         return w @ mus, np.maximum((w * w) @ vars_, 1e-12)
 
@@ -77,7 +85,8 @@ def build_rgpe(target_gp: Optional[GP],
                *,
                n_samples: int = 256,
                dilution_percentile: float = 95.0,
-               seed: int = 0) -> Optional[RGPEnsemble]:
+               seed: int = 0,
+               devices: Optional[int] = None) -> Optional[RGPEnsemble]:
     """Assemble the RGPE for one (segment, metric).
 
     Falls back gracefully at the cold-start corner cases:
@@ -89,14 +98,14 @@ def build_rgpe(target_gp: Optional[GP],
     if target_gp is None and not base_gps:
         return None
     if target_gp is not None and not base_gps:
-        return RGPEnsemble([target_gp], np.array([1.0]))
+        return RGPEnsemble([target_gp], np.array([1.0]), devices=devices)
 
     n_target = len(target_y)
     if target_gp is None or n_target < 3:
         # Not enough target evidence for ranking: borrow uniformly.
         gps = list(base_gps) + ([target_gp] if target_gp is not None else [])
         w = np.full(len(gps), 1.0 / len(gps))
-        return RGPEnsemble(gps, w)
+        return RGPEnsemble(gps, w, devices=devices)
 
     # Score on the target GP's own training set (it may lag the segment's
     # live data by a few points when refits are batched).
@@ -134,4 +143,4 @@ def build_rgpe(target_gp: Optional[GP],
         keep = np.ones_like(weights, bool)
     w = np.where(keep, weights, 0.0)
     w = w / w.sum()
-    return RGPEnsemble(gps, w)
+    return RGPEnsemble(gps, w, devices=devices)

@@ -1,12 +1,18 @@
 """Distributed substrate: meshes, sharding rules, compression, elasticity."""
 from .compression import (compress_decompress, compression_ratio, ef_init)
-from .mesh import DATA, MODEL, POD, axis_size, batch_spec, has_pod_axis
+from .mesh import (DATA, MODEL, POD, SCENARIO, axis_size, batch_spec,
+                   device_count_hint, force_host_device_flags, has_pod_axis,
+                   pad_to_multiple, scenario_mesh, scenario_sharding,
+                   scenario_spec)
 from .sharding import (CACHE_RULES, LOGICAL_RULES, PARAM_RULES,
                        cache_shardings, cache_specs, param_shardings,
                        param_specs, sanitize_spec, shard, sharding_context)
 
-__all__ = ["POD", "DATA", "MODEL", "batch_spec", "axis_size",
-           "has_pod_axis", "shard", "sharding_context", "param_specs",
+__all__ = ["POD", "DATA", "MODEL", "SCENARIO", "batch_spec", "axis_size",
+           "has_pod_axis", "scenario_mesh", "scenario_sharding",
+           "scenario_spec", "pad_to_multiple", "device_count_hint",
+           "force_host_device_flags",
+           "shard", "sharding_context", "param_specs",
            "param_shardings", "cache_specs", "cache_shardings",
            "sanitize_spec", "LOGICAL_RULES", "PARAM_RULES", "CACHE_RULES",
            "ef_init", "compress_decompress", "compression_ratio"]

@@ -1,25 +1,39 @@
 """Mesh axis conventions and helpers.
 
 Axes:
-  * ``pod``   — across pods (pure data parallelism; gradient all-reduce only)
-  * ``data``  — within-pod batch/FSDP axis
-  * ``model`` — tensor/expert parallel axis
+  * ``pod``      — across pods (pure data parallelism; gradient all-reduce
+    only)
+  * ``data``     — within-pod batch/FSDP axis
+  * ``model``    — tensor/expert parallel axis
+  * ``scenario`` — the sweep-engine scenario axis: one row of a
+    :class:`~repro.dsp.simulator.BatchState` (or one GP/forecaster bank
+    member) per position. Scenarios are independent, so computations laid
+    out on this axis partition with **no collectives**.
 
 Single pod: (data=16, model=16) = 256 chips (v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+Sweeps:     (scenario=N) — a flat 1-D mesh over whichever devices are
+visible (on CPU, split the host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; see
+``docs/SCALING.md``).
 
 ``make_production_mesh`` lives in :mod:`repro.launch.mesh` (kept import-free
 of device state); this module owns the logical-axis vocabulary and sharding
-rule tables used by the model zoo.
+rule tables used by the model zoo, plus the scenario-mesh constructors used
+by the sharded sweep stack.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 POD, DATA, MODEL = "pod", "data", "model"
+
+#: The sweep-engine batch axis (see module docstring).
+SCENARIO = "scenario"
 
 #: logical activation axes
 BATCH_AXES: Tuple[str, ...] = (POD, DATA)   # batch shards over pod+data
@@ -43,3 +57,67 @@ def axis_size(mesh: Mesh, name: str) -> int:
     if name not in mesh.axis_names:
         return 1
     return mesh.shape[name]
+
+
+# --------------------------------------------------------------------------
+# scenario meshes (sharded sweep / bank stack)
+# --------------------------------------------------------------------------
+
+def device_count_hint() -> str:
+    """The actionable remedy for "not enough devices" errors."""
+    return ("set XLA_FLAGS=--xla_force_host_platform_device_count=N to "
+            "split the host CPU into N virtual devices (see "
+            "docs/SCALING.md)")
+
+
+def scenario_mesh(devices: Optional[int] = None) -> Mesh:
+    """A flat 1-D mesh with a single ``scenario`` axis.
+
+    ``devices=None`` takes every visible device; an explicit count takes the
+    first ``devices`` of ``jax.devices()``. Raises a :class:`ValueError`
+    with the virtual-device remedy when more devices are requested than are
+    visible (instead of a deep XLA placement error later).
+    """
+    devs = jax.devices()
+    n = len(devs) if devices is None else int(devices)
+    if n < 1:
+        raise ValueError(f"scenario mesh needs at least 1 device, "
+                         f"got devices={devices!r}")
+    if n > len(devs):
+        raise ValueError(
+            f"devices={n} requested but only {len(devs)} JAX device(s) "
+            f"visible; {device_count_hint()}")
+    return Mesh(np.asarray(devs[:n]), (SCENARIO,))
+
+
+def scenario_spec(rank: int = 1) -> P:
+    """PartitionSpec sharding a leading scenario axis; trailing dims
+    replicated."""
+    return P(SCENARIO, *([None] * (rank - 1)))
+
+
+def scenario_sharding(mesh: Mesh, rank: int = 1) -> NamedSharding:
+    """NamedSharding for a ``[S, ...]`` array on a :func:`scenario_mesh`."""
+    return NamedSharding(mesh, scenario_spec(rank))
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    """Smallest ``m >= n`` with ``m % multiple == 0`` (ragged-grid padding:
+    a scenario axis must divide evenly over the mesh)."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    return -(-n // multiple) * multiple
+
+
+def force_host_device_flags(xla_flags: str, n_devices: int) -> str:
+    """An ``XLA_FLAGS`` value with the virtual host-device count forced.
+
+    Replaces any existing ``--xla_force_host_platform_device_count`` while
+    preserving every other flag. XLA latches the count at backend init, so
+    callers (the multi-device test harness, ``benchmarks/sweep_scaling.py``)
+    apply this to a *fresh subprocess's* environment.
+    """
+    flags = [f for f in xla_flags.split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={int(n_devices)}")
+    return " ".join(flags)

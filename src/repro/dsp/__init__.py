@@ -4,7 +4,8 @@ plane (sweep executors + controller policies)."""
 from .baselines import (DS2Controller, ReactiveController, StaticController,
                         baseline_config)
 from .executor import (BatchedSweepExecutor, DSPExecutor, ProfileCost,
-                       ScalarSweepExecutor, SweepExecutorBase)
+                       ScalarSweepExecutor, ShardedSweepExecutor,
+                       SweepExecutorBase)
 from .policies import BaselinePolicy, DemeterPolicy, SweepPolicy
 from .runner import FailureRecord, RunResult, run_experiment
 from .simulator import (MAX_PARALLELISM, BatchState, ClusterModel, JobConfig,
@@ -29,6 +30,7 @@ __all__ = [
     "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
     "scenario_grid", "paper_grid", "run_sweep",
     # batched control plane
-    "BatchedSweepExecutor", "ScalarSweepExecutor", "SweepExecutorBase",
+    "BatchedSweepExecutor", "ScalarSweepExecutor", "ShardedSweepExecutor",
+    "SweepExecutorBase",
     "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
 ]

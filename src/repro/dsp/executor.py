@@ -35,7 +35,15 @@ from ..core.executor import ProfileSpec
 from ..core.registry import SIM_ENGINES
 from ..core.segments import LATENCY, RECOVERY, USAGE
 from .simulator import (BatchedNormals, BatchState, ClusterModel, JobConfig,
-                        SimJob)
+                        SimJob, step_batch_arrays)
+
+
+def _x64():
+    """Run a dispatch under float64 (the sharded engine's numerics must
+    match the float64 numpy reference paths); lazy so the numpy-only
+    engines never touch jax."""
+    from jax.experimental import enable_x64
+    return enable_x64()
 
 #: Profiling lifecycle constants (paper §3.2).
 STABILIZATION_S = 120.0
@@ -230,13 +238,18 @@ class SweepExecutorBase:
     def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
                  seeds: Sequence[int], *, dt: float, n_steps: int,
                  cmax: Optional[JobConfig] = None,
-                 detector_backend: str = "scalar"):
+                 detector_backend: str = "scalar",
+                 devices: Optional[int] = None):
         S = len(configs)
         self.model = model
         self.dt = float(dt)
         self.seeds = [int(s) for s in seeds]
         self.cmax = cmax if cmax is not None else JobConfig()
         self.detector_backend = detector_backend
+        #: device-placement hint (EngineConfig.devices); only the sharded
+        #: engine acts on it, but every engine accepts it so the sweep
+        #: engine can pass one uniform constructor signature.
+        self.devices = devices
         self.hist = {k: np.zeros((S, n_steps)) for k in HIST_KEYS}
         self.workers_hist = np.zeros((S, n_steps))
         self.profile_costs = [ProfileCost() for _ in range(S)]
@@ -394,6 +407,174 @@ class BatchedSweepExecutor(SweepExecutorBase):
 
     def caught_up(self) -> np.ndarray:
         return self.state.caught_up
+
+
+@SIM_ENGINES.register("sharded")
+class ShardedSweepExecutor(SweepExecutorBase):
+    """The batched step, laid out over a ``scenario`` device mesh.
+
+    The scenario axis of :class:`~repro.dsp.simulator.BatchState` is
+    struct-of-arrays and every per-step operation is elementwise over it,
+    so the whole grid shards over a flat 1-D mesh
+    (:func:`repro.distributed.mesh.scenario_mesh`) with **zero
+    cross-scenario collectives**. Ragged grids are padded to the mesh size
+    with dummy C_max rows (simulated for shape uniformity, sliced off every
+    result).
+
+    Split of responsibilities:
+
+    * **device** — the hot elementwise update
+      (:func:`~repro.dsp.simulator.step_batch_arrays`), jitted once per
+      executor with the consumer-lag vector *donated* (the only persistent
+      device buffer) and every ``[S]`` operand laid out with
+      ``NamedSharding(mesh, P("scenario"))``;
+    * **host** — a full :class:`~repro.dsp.simulator.BatchState` mirror
+      carrying the control-flow state the numpy engine mutates in place:
+      downtime/checkpoint clocks (their update rules are deterministic, so
+      the mirror never needs a device read-back), per-job RNG streams
+      (:class:`~repro.dsp.simulator.BatchedNormals` — bit-identical to the
+      ``"batched"`` engine's draws), failure injection and reconfiguration.
+
+    Results are therefore equivalent to :class:`BatchedSweepExecutor` on a
+    shared seed — pinned by ``tests/test_sweep_sharded.py`` under 1/2/4
+    virtual devices.
+    """
+
+    def __init__(self, model: ClusterModel, configs: Sequence[JobConfig],
+                 seeds: Sequence[int], **kwargs):
+        super().__init__(model, configs, seeds, **kwargs)
+        import jax
+
+        from ..distributed.mesh import (pad_to_multiple, scenario_mesh,
+                                        scenario_sharding)
+
+        S = len(configs)
+        self.mesh = scenario_mesh(self.devices)
+        self.n_devices = int(self.mesh.devices.size)
+        #: padded scenario-axis length (mesh-divisible)
+        self.n_rows = pad_to_multiple(S, self.n_devices)
+        pad_rows = self.n_rows - S
+
+        # Host mirror: full struct-of-arrays state, padded with C_max rows.
+        self.state = BatchState.from_configs(configs).pad(self.n_rows)
+        # Padding rows draw from their own disjoint streams; real rows keep
+        # the scenario seeds, so draws are bit-identical to "batched".
+        self.rngs = BatchedNormals(
+            list(self.seeds) + [2 ** 33 + r for r in range(pad_rows)])
+        self._cap_base = model.capacity_batch(self.state)
+        self._cfg_cache = list(configs)
+        #: rollback lag staged by inject_failure, folded into the next step
+        self._lag_add = np.zeros(self.n_rows)
+
+        self._row_sharding = scenario_sharding(self.mesh)
+        with _x64():
+            self._lag = jax.device_put(
+                np.zeros(self.n_rows), self._row_sharding)
+        self._dev_cfg: Optional[tuple] = None     # rebuilt when configs move
+        self._step_fn = jax.jit(
+            step_batch_arrays,
+            static_argnames=("model", "dt"),
+            donate_argnums=(1,),                  # lag: the persistent buffer
+            in_shardings=self._row_sharding,
+            out_shardings=self._row_sharding)
+
+    # -- device plumbing ----------------------------------------------------
+    def _device_configs(self) -> tuple:
+        """Config-derived operands, device-put lazily after every
+        reconfiguration (configs change per decision, not per step)."""
+        if self._dev_cfg is None:
+            import jax
+            st = self.state
+            with _x64():
+                self._dev_cfg = tuple(
+                    jax.device_put(a, self._row_sharding)
+                    for a in (st.workers, st.cpu_cores, st.memory_mb,
+                              st.task_slots, self._cap_base))
+        return self._dev_cfg
+
+    def lower_step(self):
+        """The jitted step lowered for this executor's mesh (introspection
+        hook: the differential harness asserts the compiled module contains
+        no cross-scenario collectives)."""
+        st = self.state
+        zeros = np.zeros(self.n_rows)
+        flags = np.zeros(self.n_rows, bool)
+        with _x64():
+            return self._step_fn.lower(
+                self.model, self._lag, zeros, zeros, *self._device_configs(),
+                flags, flags, zeros, zeros, self.dt)
+
+    # -- stepping -----------------------------------------------------------
+    def _step_impl(self, rates: np.ndarray, dt: float
+                   ) -> Dict[str, np.ndarray]:
+        S = len(self.seeds)
+        st = self.state
+        r = np.zeros(self.n_rows)
+        r[:S] = rates
+
+        # Host half of step_batch: downtime / checkpoint clocks + RNG draws
+        # (identical order to the numpy engine: z1, then masked |z2|).
+        down_pre = st.downtime_left_s > 0.0
+        st.downtime_left_s = np.where(
+            down_pre, np.maximum(st.downtime_left_s - dt, 0.0),
+            st.downtime_left_s)
+        since = np.where(down_pre, st.since_checkpoint_s,
+                         st.since_checkpoint_s + dt)
+        since = np.where(~down_pre & (since >= st.checkpoint_interval_s),
+                         0.0, since)
+        st.since_checkpoint_s = since
+        down_post = st.downtime_left_s > 0.0
+        z1 = self.rngs.draw()
+        z2 = np.abs(self.rngs.draw(~down_post))
+
+        with _x64():
+            self._lag, m = self._step_fn(
+                self.model, self._lag, self._lag_add, r,
+                *self._device_configs(), down_pre, down_post, z1, z2, dt)
+        self._lag_add = np.zeros(self.n_rows)
+        # Forced copy: the device buffer is donated into the next dispatch,
+        # so the host mirror must not alias it.
+        st.lag_events = np.array(self._lag)
+        st.last_rate = r
+        out = {k: np.asarray(v)[:S] for k, v in m.items()}
+        return out
+
+    def inject_failure(self, idx: int) -> None:
+        # Mirror of ClusterModel.inject_failure_batch, except the rollback
+        # lag is staged (see step_batch_arrays) instead of scattered into
+        # the device buffer.
+        st = self.state
+        state_mb = self.model.state_size_mb(float(st.last_rate[idx]))
+        restore = state_mb / (self.model.restore_mb_per_s
+                              * max(float(st.workers[idx]), 1.0))
+        st.downtime_left_s[idx] = self.model.failure_detect_s \
+            + self.model.redeploy_s + restore
+        self._lag_add[idx] += st.last_rate[idx] * st.since_checkpoint_s[idx]
+        st.since_checkpoint_s[idx] = 0.0
+
+    def _reconfigure_impl(self, idx: int, cfg: JobConfig,
+                          restart_s: Optional[float]) -> bool:
+        if self._cfg_cache[idx] == cfg:
+            return False
+        st = self.state
+        st.set_config(idx, cfg)
+        st.downtime_left_s[idx] = max(
+            float(st.downtime_left_s[idx]),
+            self.model.reconfig_restart_s if restart_s is None else restart_s)
+        st.since_checkpoint_s[idx] = 0.0
+        self._cap_base[idx] = self.model.capacity(cfg)
+        self._cfg_cache[idx] = cfg
+        self._dev_cfg = None
+        return True
+
+    def config_of(self, idx: int) -> JobConfig:
+        return self._cfg_cache[idx]
+
+    def workers(self) -> np.ndarray:
+        return self.state.workers[:len(self.seeds)]
+
+    def caught_up(self) -> np.ndarray:
+        return self.state.caught_up[:len(self.seeds)]
 
 
 @SIM_ENGINES.register("scalar")

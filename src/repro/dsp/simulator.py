@@ -22,9 +22,13 @@ but shorten replay after failures.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import (TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
+
+if TYPE_CHECKING:                        # keep the scalar path jax-free
+    import jax.numpy as jnp
 
 #: Parallelism cap (Kafka partitions / max parallelism in the paper's setup).
 MAX_PARALLELISM = 24
@@ -228,6 +232,78 @@ class ClusterModel:
         return True
 
 
+def step_batch_arrays(model: ClusterModel, lag: "jnp.ndarray",
+                      lag_add: "jnp.ndarray", rates: "jnp.ndarray",
+                      workers: "jnp.ndarray", cpu_cores: "jnp.ndarray",
+                      memory_mb: "jnp.ndarray", task_slots: "jnp.ndarray",
+                      cap_base: "jnp.ndarray", down_pre: "jnp.ndarray",
+                      down_post: "jnp.ndarray", z1: "jnp.ndarray",
+                      z2: "jnp.ndarray", dt: float
+                      ) -> Tuple["jnp.ndarray", Dict[str, "jnp.ndarray"]]:
+    """Functional mirror of :meth:`ClusterModel.step_batch` (JAX arrays).
+
+    This is the device-side half of the sharded sweep step: every input is a
+    ``[S]`` array (elementwise over scenarios, so a ``scenario``-sharded
+    layout partitions with **no collectives**) and all *control* state that
+    the numpy path mutates in place — downtime decrement, checkpoint clock,
+    RNG draw masks, failure-rollback lag — arrives precomputed from the
+    host mirror:
+
+    * ``down_pre`` / ``down_post`` — each job's down flag before/after this
+      step's downtime decrement (drives the processed/latency branches and
+      matches the scalar RNG draw order: a down job draws no latency noise);
+    * ``lag_add`` — rollback lag from failures injected since the last step
+      (the scalar path adds it to ``lag_events`` at injection time; folding
+      it in at the next step start is equivalent because metrics are
+      recorded before injection);
+    * ``z1`` / ``z2`` — this step's capacity / latency noise draws
+      (``z2 == 0`` on down rows).
+
+    Returns ``(new_lag, metrics)`` with the same metric keys as
+    :meth:`ClusterModel.step_batch`. The only persistent device state is
+    ``lag`` — callers jit this function with ``lag`` donated (see
+    :class:`repro.dsp.executor.ShardedSweepExecutor`).
+    """
+    import jax.numpy as jnp
+
+    noise = 1.0 + model.noise * z1
+    cap = cap_base * jnp.maximum(noise, 0.5)
+
+    lag0 = lag + lag_add
+    achievable = cap * dt
+    demand = rates * dt + lag0
+    processed = jnp.minimum(achievable, demand)
+    new_lag = jnp.where(down_pre, lag0 + rates * dt, demand - processed)
+    throughput = jnp.where(down_pre, 0.0, processed / dt)
+
+    util = jnp.minimum(rates / jnp.maximum(cap, 1e-9), 1.5)
+    rho = jnp.minimum(rates / jnp.maximum(cap, 1e-9), 0.999)
+    base = model.base_latency_s * (1.0 + model.queue_gamma
+                                   * rho / (1.0 - rho))
+    backlog_delay = new_lag / jnp.maximum(cap, 1e-9)
+    mem_per_slot = memory_mb / jnp.maximum(task_slots, 1.0)
+    gc_penalty = 0.25 * (1024.0 / mem_per_slot) ** 2 * rho
+    noisy = (base + backlog_delay + gc_penalty) * (1.0 + 0.05 * z2)
+    latency = jnp.where(down_post, model.latency_cap_s,
+                        jnp.minimum(noisy, model.latency_cap_s))
+
+    f = model.cpu_idle_frac
+    usage_cpu = workers * cpu_cores * (f + (1 - f) * jnp.minimum(util, 1.0))
+    state_mb = model.state_per_krate_mb * rates / 1000.0
+    mem_needed = state_mb / jnp.maximum(workers, 1.0) + 300.0
+    mem_frac = jnp.minimum(0.25 + 0.75 * mem_needed
+                           / jnp.maximum(memory_mb, 1.0), 1.0)
+    usage_mem = workers * memory_mb * mem_frac
+
+    return new_lag, {
+        "rate": rates, "throughput": throughput, "capacity": cap,
+        "consumer_lag": new_lag, "latency": latency,
+        "utilization": util, "usage_cpu": usage_cpu,
+        "usage_mem_mb": usage_mem,
+        "down": down_post.astype(jnp.float64),
+    }
+
+
 class SupportsNormal:
     """Anything exposing ``standard_normal() -> float`` (typing aid)."""
 
@@ -345,6 +421,35 @@ class BatchState:
         self.memory_mb[i] = cfg.memory_mb
         self.task_slots[i] = cfg.task_slots
         self.checkpoint_interval_s[i] = cfg.checkpoint_interval_s
+
+    #: field names in declaration order (pad/unpad walk these)
+    FIELDS = ("workers", "cpu_cores", "memory_mb", "task_slots",
+              "checkpoint_interval_s", "lag_events", "downtime_left_s",
+              "since_checkpoint_s", "last_rate")
+
+    def pad(self, n: int,
+            fill_config: Optional[JobConfig] = None) -> "BatchState":
+        """A copy padded to ``n`` rows (``n >= len(self)``).
+
+        Padding rows carry ``fill_config`` (default :class:`JobConfig`,
+        i.e. C_max) with fresh dynamic state — exactly what the sharded
+        sweep executor simulates on the rows that square a ragged grid off
+        against the mesh size; they are masked back off with :meth:`unpad`.
+        """
+        if n < len(self):
+            raise ValueError(f"cannot pad {len(self)} rows down to {n}")
+        pad = BatchState.from_configs(
+            [fill_config or JobConfig()] * (n - len(self)))
+        return BatchState(**{f: np.concatenate([getattr(self, f),
+                                                getattr(pad, f)])
+                             for f in self.FIELDS})
+
+    def unpad(self, n: int) -> "BatchState":
+        """The first ``n`` rows as a copy (inverse of :meth:`pad`)."""
+        if n > len(self):
+            raise ValueError(f"cannot slice {n} rows out of {len(self)}")
+        return BatchState(**{f: getattr(self, f)[:n].copy()
+                             for f in self.FIELDS})
 
     @property
     def caught_up(self) -> np.ndarray:

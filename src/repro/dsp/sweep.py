@@ -9,10 +9,14 @@ a thin event loop over two pluggable surfaces:
 * a :class:`~repro.core.BatchExecutor` (the target system): the registered
   ``"batched"`` engine advances **all** scenarios at once via
   :meth:`ClusterModel.step_batch` over a struct-of-arrays
-  :class:`~repro.dsp.simulator.BatchState`; the registered ``"scalar"``
-  engine is the per-scenario :class:`~repro.dsp.simulator.SimJob` reference
-  oracle (identical orchestration, bit-comparable results on a shared
-  seed). See :class:`repro.dsp.executor.BatchedSweepExecutor` /
+  :class:`~repro.dsp.simulator.BatchState`; the registered ``"sharded"``
+  engine lays the same axis over a ``scenario`` device mesh (jitted
+  donated-buffer step, ragged grids padded to the mesh — see
+  ``docs/SCALING.md``); the registered ``"scalar"`` engine is the
+  per-scenario :class:`~repro.dsp.simulator.SimJob` reference oracle
+  (identical orchestration, bit-comparable results on a shared seed). See
+  :class:`repro.dsp.executor.BatchedSweepExecutor` /
+  :class:`~repro.dsp.executor.ShardedSweepExecutor` /
   :class:`~repro.dsp.executor.ScalarSweepExecutor`.
 * registered controller policies (:mod:`repro.dsp.policies`), invoked per
   decision/optimization interval — never per simulation step. Demeter
@@ -316,7 +320,8 @@ class SweepEngine:
                          for cls, spec in zip(policy_classes, self.specs)]
         self.executor = ex = executor_cls(
             self.model, start_configs, seeds, dt=self.dt,
-            n_steps=self.n_steps, detector_backend=config.detector_backend)
+            n_steps=self.n_steps, detector_backend=config.detector_backend,
+            devices=config.devices)
 
         # One shared ForecastBank for every scenario whose policy opts in
         # (``uses_tsf_bank``): the engine stages all due observations per
@@ -331,7 +336,7 @@ class SweepEngine:
         if bank_rows and config.forecast_backend == "bank":
             forecast_bank = ForecastBank(
                 [self.specs[j].forecaster for j in bank_rows],
-                horizon=hp_horizon)
+                horizon=hp_horizon, devices=config.devices)
             tsf_views = {j: forecast_bank.view(r)
                          for r, j in enumerate(bank_rows)}
         elif bank_rows:

@@ -1,0 +1,1 @@
+"""Subprocess-side helpers for the multi-device test harness (not tests)."""

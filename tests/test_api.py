@@ -23,8 +23,8 @@ from repro.core.demeter import DemeterController, DemeterHyperParams
 from repro.core.config_space import paper_flink_space
 from repro.dsp import (BatchedSweepExecutor, ClusterModel, DSPExecutor,
                        JobConfig, NoFailures, ScalarSweepExecutor,
-                       ScenarioSpec, SweepEngine, make_trace, run_sweep,
-                       scenario_grid)
+                       ScenarioSpec, ShardedSweepExecutor, SweepEngine,
+                       make_trace, run_sweep, scenario_grid)
 
 # ---------------------------------------------------------------------------
 # golden API snapshot
@@ -59,7 +59,8 @@ DSP_EXPORTS = {
     "FailureRecord",
     "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
     "scenario_grid", "paper_grid", "run_sweep",
-    "BatchedSweepExecutor", "ScalarSweepExecutor", "SweepExecutorBase",
+    "BatchedSweepExecutor", "ScalarSweepExecutor", "ShardedSweepExecutor",
+    "SweepExecutorBase",
     "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
 }
 
@@ -88,7 +89,7 @@ class TestApiSnapshot:
         params = inspect.signature(EngineConfig).parameters
         assert list(params) == ["sim_backend", "fit_backend",
                                 "forecast_backend", "detector_backend",
-                                "hp", "decision_interval_s"]
+                                "hp", "decision_interval_s", "devices"]
 
     def test_demeter_controller_signature(self):
         params = inspect.signature(DemeterController).parameters
@@ -102,7 +103,7 @@ class TestApiSnapshot:
                        "allocated_cost"):
             assert hasattr(core.BatchExecutor, method)
             for impl in (BatchedSweepExecutor, ScalarSweepExecutor,
-                         ScalarAdapter):
+                         ShardedSweepExecutor, ScalarAdapter):
                 assert callable(getattr(impl, method)), \
                     f"{impl.__name__} is missing {method}"
 
@@ -174,7 +175,7 @@ class TestEngineConfig:
     def test_run_sweep_rejects_unknown_engine_with_listing(self):
         spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
         with pytest.raises(ValueError, match=r"available: \('batched', "
-                                             r"'scalar'\)"), \
+                                             r"'scalar', 'sharded'\)"), \
                 warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             run_sweep([spec], engine="gpu")

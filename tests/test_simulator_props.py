@@ -1,0 +1,160 @@
+"""Property-based simulator invariants (hypothesis).
+
+The sharded refactor leans on structural properties of the simulation that
+the example-based suites only spot-check:
+
+* dynamic state stays physical under arbitrary traces — consumer lag is
+  never negative, latency lives in ``[0, latency_cap_s]``, usage is
+  non-negative and every metric stays finite (also through failures);
+* recovery time measured against the ground-truth definition is capped —
+  ``measure_recovery`` never reports more than its timeout, and the sweep
+  engine never records a finite recovery beyond ``2 * RECOVERY_CAP_S``
+  (everything slower is the paper's "6m+" / NR bookkeeping);
+* ``step_batch`` is permutation-equivariant over the scenario axis — row
+  order is pure bookkeeping, which is exactly what lets the sharded engine
+  pad and lay rows out over an arbitrary device mesh;
+* ``BatchState`` round-trips through ``pad`` / ``unpad``.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests need the optional dep
+from hypothesis import given, settings, strategies as st
+
+from repro.dsp import (BatchState, ClusterModel, JobConfig, SimJob,
+                       FailuresAt, ScenarioSpec, make_trace, run_sweep)
+from repro.dsp.runner import RECOVERY_CAP_S
+from repro.dsp.simulator import BatchedNormals, measure_recovery
+
+MODEL = ClusterModel()
+DT = 5.0
+
+configs = st.builds(
+    JobConfig,
+    workers=st.integers(1, 24),
+    cpu_cores=st.integers(1, 4),
+    memory_mb=st.sampled_from([512, 1024, 2048, 4096]),
+    task_slots=st.integers(1, 4),
+    checkpoint_interval_s=st.sampled_from([5.0, 10.0, 30.0, 60.0]),
+)
+
+rates_traces = st.lists(
+    st.floats(0.0, 200_000.0, allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=80)
+
+
+class TestStepInvariants:
+    @settings(max_examples=40, deadline=None)
+    @given(cfg=configs, rates=rates_traces, seed=st.integers(0, 2 ** 16),
+           fail_every=st.integers(0, 25))
+    def test_state_stays_physical(self, cfg, rates, seed, fail_every):
+        job = SimJob(MODEL, cfg, seed=seed)
+        for i, r in enumerate(rates):
+            if fail_every and i % fail_every == fail_every - 1:
+                job.inject_failure()
+            m = job.step(r, DT)
+            assert job.lag_events >= 0.0
+            assert 0.0 <= m["latency"] <= MODEL.latency_cap_s
+            assert m["usage_cpu"] >= 0.0 and m["usage_mem_mb"] >= 0.0
+            assert m["throughput"] >= 0.0
+            assert all(np.isfinite(v) for v in m.values())
+
+    @settings(max_examples=25, deadline=None)
+    @given(cfg=configs, rates=rates_traces, seed=st.integers(0, 2 ** 16))
+    def test_down_jobs_accumulate_exactly_the_arrivals(self, cfg, rates,
+                                                       seed):
+        job = SimJob(MODEL, cfg, seed=seed)
+        job.step(50_000.0, DT)
+        job.inject_failure()
+        lag = job.lag_events
+        for r in rates:
+            if job.downtime_left_s <= 0:
+                break
+            m = job.step(r, DT)
+            assert m["throughput"] == 0.0
+            lag += r * DT
+            assert job.lag_events == pytest.approx(lag)
+
+
+class TestRecoveryCap:
+    @settings(max_examples=25, deadline=None)
+    @given(workers=st.integers(1, 24),
+           rate=st.floats(5_000.0, 90_000.0, allow_nan=False),
+           seed=st.integers(0, 2 ** 16))
+    def test_measure_recovery_capped_at_timeout(self, workers, rate, seed):
+        job = SimJob(MODEL, JobConfig(workers=workers), seed=seed)
+        for _ in range(24):
+            job.step(rate, DT)
+        r = measure_recovery(job, lambda t: rate, 0.0, DT,
+                             timeout_s=RECOVERY_CAP_S)
+        assert r is None or 0.0 < r <= RECOVERY_CAP_S
+
+    def test_sweep_never_records_finite_recovery_beyond_cap(self):
+        # Engine-level mirror of the cap: recorded recoveries are either
+        # finite and <= 2 * RECOVERY_CAP_S, or inf with the capped flag
+        # (the paper's "6m+"), or None (NR).
+        trace = make_trace("flash", duration_s=3600.0, dt_s=DT)
+        spec = ScenarioSpec(trace=trace, controller="static", seed=0,
+                            failures=FailuresAt(600.0, 1500.0, 2400.0))
+        res = run_sweep([spec])
+        recs = res.scenarios[0].failures
+        assert len(recs) == 3
+        for f in recs:
+            if f.recovery_s is None:
+                continue
+            if np.isfinite(f.recovery_s):
+                assert 0.0 < f.recovery_s <= 2 * RECOVERY_CAP_S
+            else:
+                assert f.capped
+
+
+class TestPermutationEquivariance:
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.data(), n=st.integers(2, 6), steps=st.integers(1, 40))
+    def test_step_batch_is_permutation_equivariant(self, data, n, steps):
+        cfgs = data.draw(st.lists(configs, min_size=n, max_size=n))
+        seeds = data.draw(st.lists(st.integers(0, 2 ** 16), min_size=n,
+                                   max_size=n, unique=True))
+        perm = data.draw(st.permutations(range(n)))
+        fail_at = data.draw(st.integers(0, steps - 1))
+        fail_row = data.draw(st.integers(0, n - 1))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+        rates = rng.uniform(10_000, 90_000, (steps, n))
+
+        sa = BatchState.from_configs(cfgs)
+        sb = BatchState.from_configs([cfgs[p] for p in perm])
+        ra = BatchedNormals(seeds)
+        rb = BatchedNormals([seeds[p] for p in perm])
+        inv = np.argsort(perm)          # row j of A sits at inv[j] in B
+        for i in range(steps):
+            if i == fail_at:
+                MODEL.inject_failure_batch(sa, fail_row)
+                MODEL.inject_failure_batch(sb, int(inv[fail_row]))
+            ma = MODEL.step_batch(sa, rates[i], DT, ra)
+            mb = MODEL.step_batch(sb, rates[i][perm], DT, rb)
+            for k in ma:
+                np.testing.assert_array_equal(ma[k][perm], mb[k], err_msg=k)
+        np.testing.assert_array_equal(sa.caught_up[perm], sb.caught_up)
+
+
+class TestPadUnpadRoundtrip:
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data(), n=st.integers(1, 6), extra=st.integers(0, 6))
+    def test_roundtrip_preserves_every_field(self, data, n, extra):
+        cfgs = data.draw(st.lists(configs, min_size=n, max_size=n))
+        state = BatchState.from_configs(cfgs)
+        rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+        state.lag_events = rng.uniform(0, 1e6, n)
+        state.downtime_left_s = rng.uniform(0, 120, n)
+        state.since_checkpoint_s = rng.uniform(0, 60, n)
+        state.last_rate = rng.uniform(0, 1e5, n)
+        padded = state.pad(n + extra)
+        assert len(padded) == n + extra
+        back = padded.unpad(n)
+        for f in BatchState.FIELDS:
+            np.testing.assert_array_equal(getattr(back, f),
+                                          getattr(state, f), err_msg=f)
+        for i in range(n):
+            assert padded.config_of(i) == cfgs[i]
+        for i in range(n, n + extra):
+            assert padded.config_of(i) == JobConfig()

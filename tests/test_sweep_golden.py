@@ -1,0 +1,53 @@
+"""Golden-file regression for the sweep protocol (Table-3 semantics).
+
+``tests/golden/sweep_small.json`` is the scalar oracle's full JSON digest
+of a small paper-style grid (trace x controller under periodic failures) —
+latency percentiles, usage integrals, recovery bookkeeping, reconfiguration
+counts. Engine refactors must reproduce it:
+
+* ``scalar`` and ``batched`` **bit-for-bit** (float repr round-trips
+  exactly through JSON);
+* ``sharded`` at 1e-12 relative (the XLA:CPU FMA-contraction caveat, see
+  docs/SCALING.md), asserted by the ``golden`` case of
+  ``tests/helpers/sharded_diff.py`` under 2 virtual devices.
+
+Regenerate after an *intentional* semantics change::
+
+    PYTHONPATH=src python tests/helpers/sharded_diff.py --case golden --regen
+"""
+import json
+from pathlib import Path
+
+from repro.core import EngineConfig
+from repro.dsp import run_sweep
+
+from helpers.sharded_diff import GOLDEN_PATH, VOLATILE, _specs
+
+DIFF_SCRIPT = Path(__file__).parent / "helpers" / "sharded_diff.py"
+
+
+def _digest(result) -> dict:
+    return {k: v for k, v in result.to_json().items() if k not in VOLATILE}
+
+
+class TestGoldenSweep:
+    def test_golden_file_exists_and_parses(self):
+        golden = json.loads(GOLDEN_PATH.read_text())
+        assert len(golden["scenarios"]) == 4
+        assert golden["n_steps"] == 180
+        for sc in golden["scenarios"]:
+            assert sc["n_failures_injected"] == 2
+
+    def test_scalar_oracle_reproduces_golden_bit_for_bit(self):
+        res = run_sweep(_specs("golden"),
+                        config=EngineConfig(sim_backend="scalar"))
+        assert _digest(res) == json.loads(GOLDEN_PATH.read_text())
+
+    def test_batched_engine_reproduces_golden_bit_for_bit(self):
+        res = run_sweep(_specs("golden"), config=EngineConfig())
+        assert _digest(res) == json.loads(GOLDEN_PATH.read_text())
+
+    def test_sharded_engine_reproduces_golden(self, run_under_devices):
+        out = run_under_devices(2, DIFF_SCRIPT,
+                                "--case", "golden", "--devices", 2)
+        assert "DIFF-OK case=golden devices=2" in out

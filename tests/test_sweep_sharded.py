@@ -1,0 +1,218 @@
+"""Differential suite for the device-sharded sweep engine.
+
+Two layers:
+
+* **in-process** — BatchState pad/unpad, direct
+  ``ShardedSweepExecutor``-vs-``BatchedSweepExecutor`` step equivalence on
+  whatever mesh the current process has (a 1-device mesh exercises the
+  whole jitted/donated path), and ``EngineConfig`` device validation;
+* **subprocess** — the full sharded/batched/scalar ``SweepResult``
+  equivalence under 1/2/4 *virtual* devices.
+  ``xla_force_host_platform_device_count`` is latched at backend init, so
+  each device count runs ``tests/helpers/sharded_diff.py`` in a fresh
+  interpreter via the ``run_under_devices`` fixture (see
+  ``tests/conftest.py``); ragged grids and active failure schedules are
+  exercised there, and the worker also asserts the compiled step contains
+  no cross-scenario collectives.
+"""
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig
+from repro.dsp import (BatchedSweepExecutor, BatchState, ClusterModel,
+                       JobConfig, PeriodicFailures, ShardedSweepExecutor,
+                       make_trace, run_sweep, scenario_grid)
+
+DIFF_SCRIPT = Path(__file__).parent / "helpers" / "sharded_diff.py"
+MODEL = ClusterModel()
+
+
+# ---------------------------------------------------------------------------
+# BatchState pad / unpad
+# ---------------------------------------------------------------------------
+
+class TestBatchStatePadding:
+    def test_roundtrip(self):
+        configs = [JobConfig(workers=4), JobConfig(workers=9)]
+        state = BatchState.from_configs(configs)
+        state.lag_events[:] = [10.0, 20.0]
+        state.downtime_left_s[:] = [0.0, 33.0]
+        state.last_rate[:] = [40e3, 50e3]
+        padded = state.pad(5)
+        assert len(padded) == 5
+        back = padded.unpad(2)
+        for f in BatchState.FIELDS:
+            np.testing.assert_array_equal(getattr(back, f),
+                                          getattr(state, f))
+
+    def test_pad_rows_are_fresh_cmax(self):
+        padded = BatchState.from_configs([JobConfig(workers=4)]).pad(3)
+        assert padded.config_of(1) == padded.config_of(2) == JobConfig()
+        np.testing.assert_array_equal(padded.lag_events[1:], 0.0)
+        np.testing.assert_array_equal(padded.downtime_left_s[1:], 0.0)
+
+    def test_pad_same_size_is_identity(self):
+        state = BatchState.from_configs([JobConfig()])
+        assert len(state.pad(1)) == 1
+
+    def test_pad_shrink_rejected(self):
+        with pytest.raises(ValueError, match="pad"):
+            BatchState.from_configs([JobConfig()] * 3).pad(2)
+
+    def test_unpad_grow_rejected(self):
+        with pytest.raises(ValueError, match="slice"):
+            BatchState.from_configs([JobConfig()]).unpad(2)
+
+    def test_unpad_copies(self):
+        state = BatchState.from_configs([JobConfig()] * 2)
+        view = state.unpad(1)
+        view.lag_events[0] = 123.0
+        assert state.lag_events[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# direct executor equivalence (any mesh width, including 1)
+# ---------------------------------------------------------------------------
+
+class TestShardedExecutorEquivalence:
+    """ShardedSweepExecutor must track BatchedSweepExecutor step-for-step
+    through failures and reconfigurations; runs on however many devices the
+    process has (the CI matrix leg gives it 4)."""
+
+    def _pair(self, configs, seeds, n_steps):
+        kw = dict(dt=5.0, n_steps=n_steps)
+        return (BatchedSweepExecutor(MODEL, configs, seeds, **kw),
+                ShardedSweepExecutor(MODEL, configs, seeds, **kw))
+
+    def test_step_failure_reconfigure_equivalence(self):
+        configs = [JobConfig(), JobConfig(workers=6), JobConfig(workers=4)]
+        seeds = [0, 1, 2]
+        n_steps = 240
+        bat, sh = self._pair(configs, seeds, n_steps)
+        assert sh.n_rows % sh.n_devices == 0
+        rng = np.random.default_rng(42)
+        big = JobConfig(workers=12)
+        for i in range(n_steps):
+            if i == 60:
+                bat.inject_failure(1)
+                sh.inject_failure(1)
+            if i == 120:
+                assert bat.reconfigure_one(2, big)
+                assert sh.reconfigure_one(2, big)
+            rates = rng.uniform(20_000, 70_000, len(configs))
+            mb = bat.step(rates)
+            ms = sh.step(rates)
+            assert set(ms) == set(mb)
+            for k in mb:
+                np.testing.assert_allclose(ms[k], mb[k], rtol=1e-9,
+                                           atol=1e-9, err_msg=k)
+            np.testing.assert_array_equal(sh.caught_up(), bat.caught_up())
+            np.testing.assert_array_equal(sh.workers(), bat.workers())
+        np.testing.assert_array_equal(sh.reconf_count, bat.reconf_count)
+        for k in bat.hist:
+            np.testing.assert_allclose(sh.hist[k], bat.hist[k], rtol=1e-9,
+                                       atol=1e-9, err_msg=k)
+
+    def test_ragged_padding_matches_mesh(self):
+        n = jax.device_count()
+        configs = [JobConfig()] * (n + 1)
+        sh = ShardedSweepExecutor(MODEL, configs, list(range(n + 1)),
+                                  dt=5.0, n_steps=4)
+        assert sh.n_rows == 2 * n
+        m = sh.step(np.full(n + 1, 50_000.0))
+        assert all(v.shape == (n + 1,) for v in m.values())
+
+    def test_noop_reconfigure_not_counted(self):
+        sh = ShardedSweepExecutor(MODEL, [JobConfig()], [0], dt=5.0,
+                                  n_steps=4)
+        assert not sh.reconfigure_one(0, JobConfig())
+        assert sh.reconf_count[0] == 0
+
+    def test_compiled_step_has_no_collectives(self):
+        sh = ShardedSweepExecutor(MODEL, [JobConfig()] * 4, [0, 1, 2, 3],
+                                  dt=5.0, n_steps=4)
+        txt = sh.lower_step().compile().as_text()
+        for word in ("all-reduce", "all-gather", "all-to-all",
+                     "collective-permute", "reduce-scatter"):
+            assert word not in txt, f"unexpected collective: {word}"
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig device placement validation
+# ---------------------------------------------------------------------------
+
+class TestEngineConfigDevices:
+    @pytest.mark.parametrize("bad", [0, -1, 2.5, True, "two"])
+    def test_rejects_non_positive_int_devices(self, bad):
+        with pytest.raises(ValueError, match="devices"):
+            EngineConfig(devices=bad)
+
+    def test_rejects_more_devices_than_visible(self):
+        with pytest.raises(ValueError,
+                           match="xla_force_host_platform_device_count"):
+            EngineConfig(devices=jax.device_count() + 1)
+
+    def test_rejects_sharded_on_one_explicit_device(self):
+        with pytest.raises(ValueError, match="at least 2 devices"):
+            EngineConfig(sim_backend="sharded", devices=1)
+
+    def test_devices_accepted_up_to_visible(self):
+        cfg = EngineConfig(devices=jax.device_count())
+        assert cfg.devices == jax.device_count()
+
+    def test_single_device_sharded_rejected_in_subprocess(
+            self, run_under_devices):
+        # Deterministic regardless of this process's device count: a fresh
+        # interpreter with exactly one visible device must reject
+        # sim_backend="sharded" with the actionable message.
+        out = run_under_devices(1, DIFF_SCRIPT, "--case", "reject")
+        assert "REJECT-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# full differential runs under 1/2/4 virtual devices (subprocesses)
+# ---------------------------------------------------------------------------
+
+class TestShardedDifferential:
+    @pytest.mark.parametrize("case,devices", [
+        ("uniform", 2),
+        ("ragged", 2),
+        ("ragged", 4),
+    ])
+    def test_sharded_matches_batched_and_scalar(self, run_under_devices,
+                                                case, devices):
+        out = run_under_devices(devices, DIFF_SCRIPT,
+                                "--case", case, "--devices", devices)
+        assert f"DIFF-OK case={case} devices={devices}" in out
+
+    @pytest.mark.slow
+    def test_demeter_sharded_matches_batched(self, run_under_devices):
+        # Demeter controllers on the sharded engine: shared GP +
+        # forecast banks dispatch over the same scenario mesh.
+        out = run_under_devices(4, DIFF_SCRIPT,
+                                "--case", "demeter", "--devices", 4)
+        assert "DIFF-OK case=demeter devices=4" in out
+
+
+# ---------------------------------------------------------------------------
+# in-process end-to-end when this process already has a mesh (CI matrix leg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices in-process (run under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=4)")
+class TestShardedInProcess:
+    def test_run_sweep_sharded_default_devices(self):
+        traces = [make_trace(k, duration_s=600.0, dt_s=5.0)
+                  for k in ("diurnal", "flash")]
+        grid = scenario_grid(traces, ("static", "reactive"), (0,),
+                             failures=PeriodicFailures(300.0))
+        sharded = run_sweep(grid, config=EngineConfig(sim_backend="sharded"))
+        batched = run_sweep(grid)
+        assert sharded.engine == "sharded"
+        for a, b in zip(sharded.scenarios, batched.scenarios):
+            assert a.allclose(b), f"{a.name} diverged"
