@@ -1,0 +1,133 @@
+"""Verify every registered backend's compilation contract.
+
+Imports the four backend-defining modules (which attach their probe
+factories to the registries — see
+:meth:`repro.core.registry.Registry.attach_contract`), then enumerates
+``SIM_ENGINES`` / ``FIT_BACKENDS`` / ``FORECAST_BACKENDS`` /
+``DETECTOR_BACKENDS`` and runs each entry's
+:class:`~repro.analysis.contracts.ContractProbe` through
+:func:`~repro.analysis.contracts.check_contract`. A registered entry
+*without* an attached contract is itself a failure: new backends cannot
+silently skip the analyzer.
+
+Exit code 0 when every contract holds; 1 otherwise. Run as::
+
+    PYTHONPATH=src python scripts/check_contracts.py [--json out.json]
+
+``--seed-violation`` registers a synthetic backend that breaks three
+invariants at once (callback inside a scan body, float64 under a float32
+ceiling, missing donation) and must turn the exit code red — the CI job
+runs it to prove the checker can fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+
+def _registries():
+    # Importing the defining modules populates entries *and* contracts.
+    import repro.core.anomaly          # noqa: F401
+    import repro.core.demeter          # noqa: F401
+    import repro.core.forecast_bank    # noqa: F401
+    import repro.dsp.executor          # noqa: F401
+    from repro.core.registry import (DETECTOR_BACKENDS, FIT_BACKENDS,
+                                     FORECAST_BACKENDS, SIM_ENGINES)
+    return (SIM_ENGINES, FIT_BACKENDS, FORECAST_BACKENDS, DETECTOR_BACKENDS)
+
+
+def _seed_violation() -> None:
+    """Register a backend that must fail: callback-in-scan + f64 under a
+    float32 ceiling + donation that never materializes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.contracts import CompilationContract, ContractProbe
+    from repro.core.registry import SIM_ENGINES
+
+    def bad_step(x):
+        def body(c, _):
+            jax.debug.print("tick {c}", c=c[0])
+            return (c[0] + jnp.sum(x.astype(jnp.float64)),), None
+        (out,), _ = jax.lax.scan(body, (jnp.float64(0.0),), None, length=4)
+        return out
+
+    def probe():
+        contract = CompilationContract(
+            name="engine:seeded-violation", donation=True,
+            dtype_ceiling="float32", forbid_callbacks=True,
+            note="synthetic contract breaker (--seed-violation)")
+        return ContractProbe(contract=contract, fn=bad_step,
+                             args=(jnp.ones(4, jnp.float32),), x64=True)
+
+    SIM_ENGINES.register("seeded-violation", object())
+    SIM_ENGINES.attach_contract("seeded-violation", probe)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the per-contract reports as JSON")
+    ap.add_argument("--seed-violation", action="store_true",
+                    help="register a deliberately broken backend; the run "
+                         "must exit non-zero")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="check only entries whose '<kind>:<name>' label "
+                         "contains SUBSTR")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.contracts import ContractReport, run_probe
+
+    registries = _registries()
+    if args.seed_violation:
+        _seed_violation()
+
+    reports: list[ContractReport] = []
+    failed = 0
+    for reg in registries:
+        for name in reg:
+            label = f"{reg.kind}:{name}"
+            if args.only is not None and args.only not in label:
+                continue
+            if not reg.has_contract(name):
+                reports.append(ContractReport(
+                    name=label, ok=False, note="no contract attached"))
+                print(f"FAIL {label}: registered without a compilation "
+                      f"contract (attach one with "
+                      f"{type(reg).__name__}.attach_contract)")
+                failed += 1
+                continue
+            probes = reg.contract_for(name)()
+            for probe in (probes if isinstance(probes, list) else [probes]):
+                try:
+                    report = run_probe(probe)
+                except Exception as e:  # lowering itself blew up
+                    report = ContractReport(
+                        name=probe.contract.name or label, ok=False,
+                        note=f"probe raised {type(e).__name__}: {e}")
+                reports.append(report)
+                status = "ok  " if report.ok else "FAIL"
+                print(f"{status} {report.summary()}")
+                if report.note and report.ok:
+                    print(f"       {report.note}")
+                failed += 0 if report.ok else 1
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            {"ok": failed == 0,
+             "reports": [r.to_dict() for r in reports]}, indent=2) + "\n")
+        print(f"wrote {args.json}")
+
+    print(f"{len(reports) - failed}/{len(reports)} contracts hold")
+    return 0 if failed == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Static analysis for the compiled hot paths (contracts) and the source
+tree (lint). See ``docs/ANALYSIS.md`` for the catalog.
+
+Two passes:
+
+* :mod:`repro.analysis.contracts` — declarative
+  :class:`~repro.analysis.contracts.CompilationContract` invariants over
+  lowered jaxprs and compiled HLO, attached to registry entries
+  (``SIM_ENGINES`` / ``FIT_BACKENDS`` / ``FORECAST_BACKENDS`` /
+  ``DETECTOR_BACKENDS``) and verified by ``scripts/check_contracts.py``;
+* :mod:`repro.analysis.lint` — repo-specific AST rules (REPRO-001..005)
+  run by ``scripts/lint_repro.py`` against ``analysis/baseline.json``.
+"""
+from .contracts import (CALLBACK_PRIMITIVES, COLLECTIVE_HLO_OPS,
+                        CompilationContract, ContractProbe, ContractReport,
+                        ContractViolation, check_contract, count_traces,
+                        jaxpr_summary, run_probe)
+from .lint import (RULES, LintFinding, LintRule, diff_against_baseline,
+                   lint_paths, lint_source, load_baseline, save_baseline)
+
+__all__ = [
+    "COLLECTIVE_HLO_OPS", "CALLBACK_PRIMITIVES",
+    "CompilationContract", "ContractProbe", "ContractReport",
+    "ContractViolation", "check_contract", "count_traces", "jaxpr_summary",
+    "run_probe",
+    "RULES", "LintFinding", "LintRule", "lint_source", "lint_paths",
+    "load_baseline", "save_baseline", "diff_against_baseline",
+]

@@ -1,0 +1,442 @@
+"""Repo-specific AST lint rules (Pass 2 of the compilation-contract analyzer).
+
+Five rules encode conventions the jitted hot paths depend on but no generic
+linter knows about. Each has a stable code usable in a suppression comment
+(``# noqa: REPRO-003``) and a one-line rationale surfaced by
+``scripts/lint_repro.py --rules``:
+
+========== ================================================================
+RULE-001   no ``np.*`` *calls* inside ``@jax.jit`` bodies (silent host
+           round-trip / trace-time constant folding of what should be
+           traced computation)
+RULE-002   no JAX PRNG key reuse — a key passed to two consumers without an
+           intervening ``split`` yields correlated draws
+RULE-003   no Python ``for`` loop over the scenario/batch axis in ``dsp/``
+           and ``core/`` bank code (the batched engines exist precisely to
+           remove per-scenario Python iteration)
+RULE-004   registry entries are constructed via ``Registry.register`` —
+           poking ``_entries`` bypasses duplicate/override protection
+RULE-005   no ``jnp.float64`` / ``astype("float64")`` outside the
+           designated scalar-oracle modules (an f64 upcast in a jitted f32
+           path silently doubles memory traffic; deliberate f64 mirrors of
+           NumPy oracles live in the allow-listed modules)
+========== ================================================================
+
+Pre-existing findings live in ``analysis/baseline.json``; CI fails only
+when *new* findings appear (see :func:`diff_against_baseline`). Baseline
+entries match on (rule, path, source line text) — not line numbers — so
+unrelated edits do not churn the baseline.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "LintFinding", "LintRule", "RULES", "lint_source", "lint_paths",
+    "load_baseline", "save_baseline", "diff_against_baseline",
+]
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    """One rule violation at one source location."""
+
+    rule: str          # "REPRO-001"
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    col: int
+    message: str
+    snippet: str       # stripped source line (baseline matching key)
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: stable across pure line-number drift."""
+        return (self.rule, self.path, self.snippet)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "snippet": self.snippet}
+
+
+@dataclass(frozen=True)
+class LintRule:
+    """A registered rule: stable code + scope predicate + AST check."""
+
+    code: str
+    title: str
+    rationale: str
+    check: Callable[[ast.AST, str], List[Tuple[int, int, str]]]
+    #: None = every file; else a predicate over the repo-relative path
+    applies_to: Optional[Callable[[str], bool]] = None
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.split' for nested Attribute/Name chains ('' otherwise)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """Matches @jax.jit, @jit, @partial(jax.jit, ...), @functools.partial(
+    jax.jit, ...) and @jax.jit(...)."""
+    if _dotted(dec) in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = _dotted(dec.func)
+        if fn in ("jax.jit", "jit"):
+            return True
+        if fn in ("partial", "functools.partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+# ---------------------------------------------------------------------------
+# RULE-001: no np.* calls inside @jax.jit bodies
+# ---------------------------------------------------------------------------
+
+def _check_np_in_jit(tree: ast.AST, src: str):
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not any(_is_jit_decorator(d) for d in node.decorator_list):
+            continue
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Call):
+                fn = _dotted(inner.func)
+                if fn.startswith("np.") or fn.startswith("numpy."):
+                    out.append((inner.lineno, inner.col_offset,
+                                f"numpy call `{fn}(...)` inside the "
+                                f"@jax.jit body of `{node.name}` — the "
+                                f"result is a trace-time constant (or a "
+                                f"host sync), not traced computation"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RULE-002: no PRNG key reuse
+# ---------------------------------------------------------------------------
+
+#: jax.random functions that *transform* keys rather than consume them.
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "clone", "wrap_key_data"}
+
+
+def _check_key_reuse(tree: ast.AST, src: str):
+    out = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # Replay assignments and consumer calls in source order (ast.walk
+        # order is not source order, and the reassignment ledger needs it).
+        events: List[Tuple[int, int, str, str]] = []
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Assign):
+                for tgt in inner.targets:
+                    for name_node in ast.walk(tgt):
+                        if isinstance(name_node, ast.Name):
+                            events.append((inner.lineno, inner.col_offset,
+                                           "assign", name_node.id))
+            elif isinstance(inner, ast.Call):
+                fn = _dotted(inner.func)
+                if not fn.startswith(("jax.random.", "jrandom.")):
+                    continue
+                if fn.rsplit(".", 1)[1] in _KEY_MAKERS:
+                    continue
+                for arg in inner.args:
+                    if isinstance(arg, ast.Name) \
+                            and ("key" in arg.id.lower()
+                                 or arg.id in ("rng", "k")):
+                        events.append((arg.lineno, arg.col_offset,
+                                       "consume", arg.id))
+        used: Dict[str, Tuple[int, int]] = {}    # key var -> first use loc
+        for line, col, kind, name in sorted(events):
+            if kind == "assign":
+                used.pop(name, None)
+            elif name in used:
+                out.add((line, col,
+                         f"PRNG key `{name}` consumed again without a "
+                         f"split (first consumed at line {used[name][0]}) "
+                         f"— both consumers draw identical randomness"))
+            else:
+                used[name] = (line, col)
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# RULE-003: no Python for loop over the scenario/batch axis in bank code
+# ---------------------------------------------------------------------------
+
+#: Identifiers naming the scenario/batch axis length.
+_AXIS_LENGTHS = {"n_scenarios", "n_streams", "n_rows", "n_members", "S", "B"}
+#: Containers whose elements are per-scenario/per-stream objects.
+_AXIS_CONTAINERS = {"scenarios", "jobs", "streams"}
+#: len(...) arguments that denote the scenario axis.
+_AXIS_LEN_ARGS = {"seeds", "configs", "scenarios", "jobs", "streams"}
+
+
+def _names_in(node: ast.AST) -> Iterable[str]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            yield n.attr
+
+
+def _iterates_scenario_axis(it: ast.expr) -> Optional[str]:
+    """Why this iterable walks the scenario axis, or None."""
+    call = it if isinstance(it, ast.Call) else None
+    # Unwrap enumerate(...) / zip(...): any scenario-axis operand counts.
+    if call is not None and _dotted(call.func) in ("enumerate", "zip"):
+        for a in call.args:
+            why = _iterates_scenario_axis(a)
+            if why:
+                return why
+        return None
+    if call is not None and _dotted(call.func) == "range":
+        for a in call.args:
+            for name in _names_in(a):
+                if name in _AXIS_LENGTHS:
+                    return f"range over scenario-axis length `{name}`"
+            for n in ast.walk(a):
+                if isinstance(n, ast.Call) and _dotted(n.func) == "len" \
+                        and n.args:
+                    for name in _names_in(n.args[0]):
+                        if name in _AXIS_LEN_ARGS:
+                            return (f"range over len of per-scenario "
+                                    f"container `{name}`")
+        return None
+    for name in _names_in(it):
+        if name in _AXIS_CONTAINERS:
+            return f"iterates per-scenario container `{name}`"
+    return None
+
+
+def _check_scenario_loop(tree: ast.AST, src: str):
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.For):
+            continue
+        why = _iterates_scenario_axis(node.iter)
+        if why:
+            out.append((node.lineno, node.col_offset,
+                        f"Python for loop over the scenario/batch axis "
+                        f"({why}) — batch it or mark the reference oracle "
+                        f"with `# noqa: REPRO-003`"))
+    return out
+
+
+def _rule3_scope(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return "/dsp/" in p or ("/core/" in p and "bank" in Path(p).name)
+
+
+# ---------------------------------------------------------------------------
+# RULE-004: registries are populated via Registry.register only
+# ---------------------------------------------------------------------------
+
+def _check_registry_poke(tree: ast.AST, src: str):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "_entries":
+            base = node.value
+            if isinstance(base, ast.Name) and base.id == "self":
+                continue                      # Registry's own methods
+            out.append((node.lineno, node.col_offset,
+                        f"direct `{_dotted(node) or '_entries'}` access — "
+                        f"construct registry entries via Registry.register "
+                        f"(duplicate/override protection, canonical errors)"))
+    return out
+
+
+def _rule4_scope(path: str) -> bool:
+    return not path.replace("\\", "/").endswith("core/registry.py")
+
+
+# ---------------------------------------------------------------------------
+# RULE-005: no f64 requests outside the scalar-oracle modules
+# ---------------------------------------------------------------------------
+
+#: Modules whose float64 is *the point* (NumPy reference oracles and the
+#: simulator step that must match them bit-for-bit).
+_F64_ORACLES = ("core/forecast.py", "core/gp.py", "core/acquisition.py",
+                "core/rgpe.py", "core/anomaly.py")
+
+
+def _check_f64(tree: ast.AST, src: str):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64" \
+                and _dotted(node) == "jnp.float64":
+            out.append((node.lineno, node.col_offset,
+                        "`jnp.float64` outside a scalar-oracle module — "
+                        "hot paths are float32 unless the contract says "
+                        "otherwise (allow-list: analysis.lint._F64_ORACLES)"))
+        if isinstance(node, ast.Call):
+            fn = node.func
+            is_astype = isinstance(fn, ast.Attribute) and fn.attr == "astype"
+            args = list(node.args) + [kw.value for kw in node.keywords
+                                      if kw.arg == "dtype"]
+            for a in args:
+                if isinstance(a, ast.Constant) and a.value == "float64" \
+                        and (is_astype or any(kw.arg == "dtype"
+                                              for kw in node.keywords)):
+                    out.append((a.lineno, a.col_offset,
+                                '`"float64"` dtype request outside a '
+                                "scalar-oracle module"))
+    return out
+
+
+def _rule5_scope(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return not any(p.endswith(m) for m in _F64_ORACLES)
+
+
+# ---------------------------------------------------------------------------
+# the rule table
+# ---------------------------------------------------------------------------
+
+RULES: Tuple[LintRule, ...] = (
+    LintRule("REPRO-001", "no numpy calls inside @jax.jit bodies",
+             "np.* inside a jitted body folds to a trace-time constant or "
+             "forces a host sync; use jnp.* so the op is traced.",
+             _check_np_in_jit),
+    LintRule("REPRO-002", "no JAX PRNG key reuse",
+             "A key passed to two consumers without split() yields "
+             "identical draws — silent statistical corruption.",
+             _check_key_reuse),
+    LintRule("REPRO-003", "no Python loop over the scenario/batch axis",
+             "The batched banks/engines exist to remove per-scenario "
+             "Python iteration; a stray loop reintroduces the O(S) "
+             "dispatch cost PRs 2-5 removed.",
+             _check_scenario_loop, applies_to=_rule3_scope),
+    LintRule("REPRO-004", "registries are populated via Registry.register",
+             "Dict pokes bypass duplicate protection and the canonical "
+             "unknown-name error contract.",
+             _check_registry_poke, applies_to=_rule4_scope),
+    LintRule("REPRO-005", "no float64 requests outside scalar oracles",
+             "An f64 upcast in a jitted f32 path doubles memory traffic "
+             "and splits the jit cache; deliberate f64 oracle mirrors are "
+             "allow-listed.",
+             _check_f64, applies_to=_rule5_scope),
+)
+
+_RULES_BY_CODE = {r.code: r for r in RULES}
+
+#: `# noqa: REPRO-001` or `# noqa: REPRO-001, REPRO-005` (bare `# noqa`
+#: deliberately does NOT suppress — escapes must name the rule).
+_NOQA = re.compile(r"#\s*noqa:\s*([A-Z0-9, -]+)")
+
+
+def _suppressed(line_text: str, code: str) -> bool:
+    m = _NOQA.search(line_text)
+    if not m:
+        return False
+    return code in {c.strip() for c in m.group(1).split(",")}
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, path: str,
+                rules: Sequence[LintRule] = RULES) -> List[LintFinding]:
+    """Lint one module's source; ``path`` is the repo-relative posix path
+    (rule scoping and finding identity both key on it)."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as exc:
+        return [LintFinding("REPRO-000", path, exc.lineno or 0, 0,
+                            f"syntax error: {exc.msg}", "")]
+    lines = src.splitlines()
+    findings: List[LintFinding] = []
+    for rule in rules:
+        if rule.applies_to is not None and not rule.applies_to(path):
+            continue
+        for line, col, message in rule.check(tree, src):
+            text = lines[line - 1] if 0 < line <= len(lines) else ""
+            if _suppressed(text, rule.code):
+                continue
+            findings.append(LintFinding(rule.code, path, line, col,
+                                        message, text.strip()))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def lint_paths(root: Path, paths: Sequence[Path],
+               rules: Sequence[LintRule] = RULES) -> List[LintFinding]:
+    """Lint every ``*.py`` file under ``paths`` (files or directories)."""
+    files: List[Path] = []
+    for p in paths:
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    findings: List[LintFinding] = []
+    for f in files:
+        rel = f.resolve().relative_to(root.resolve()).as_posix()
+        findings.extend(lint_source(f.read_text(), rel, rules))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> List[Dict[str, object]]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("findings", data) if isinstance(data, dict)
+                else data)
+
+
+def save_baseline(path: Path, findings: Sequence[LintFinding]) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"findings": [f.to_dict() for f in findings]}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def diff_against_baseline(findings: Sequence[LintFinding],
+                          baseline: Sequence[Dict[str, object]]
+                          ) -> Tuple[List[LintFinding], List[Dict[str, object]]]:
+    """(new findings, fixed baseline entries). Matching is by
+    (rule, path, snippet) with multiplicity — two identical loops in one
+    file need two baseline entries."""
+    def key_of(d: Dict[str, object]) -> Tuple[str, str, str]:
+        return (str(d.get("rule")), str(d.get("path")),
+                str(d.get("snippet", "")).strip())
+
+    remaining: Dict[Tuple[str, str, str], int] = {}
+    for entry in baseline:
+        k = key_of(entry)
+        remaining[k] = remaining.get(k, 0) + 1
+
+    new: List[LintFinding] = []
+    for f in findings:
+        k = f.key()
+        if remaining.get(k, 0) > 0:
+            remaining[k] -= 1
+        else:
+            new.append(f)
+    fixed = []
+    for entry in baseline:
+        k = key_of(entry)
+        if remaining.get(k, 0) > 0:
+            remaining[k] -= 1
+            fixed.append(entry)
+    return new, fixed

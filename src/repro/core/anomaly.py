@@ -112,6 +112,48 @@ class BankedDetectorSet:
         return int(self.bank.observe(vals).sum())
 
 
+def _bank_detector_probe():
+    """Contract for the banked detector's per-sample dispatch
+    (``_detector_observe``): state/ring donation must survive compilation
+    (it fires once per telemetry sample — the hottest anomaly path),
+    float64 is deliberate (flag/episode agreement with the scalar
+    detector is pinned bit-for-bit), and no callback may reach the
+    device stream."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from ..analysis.contracts import CompilationContract, ContractProbe
+    from .forecast_bank import DetectorBank, _detector_observe
+
+    db = DetectorBank(3)
+    with enable_x64():
+        vals = jnp.zeros(db.b)
+        act = jnp.ones(db.b, bool)
+    contract = CompilationContract(
+        name="detector backend:bank",
+        donation=True,               # state/ring/count rebound every sample
+        dtype_ceiling="float64",     # mirrors the float64 scalar detector
+        forbid_callbacks=True,
+        note="batched one-step-error anomaly detectors (predict, MAD "
+             "threshold, conditional learn) in one dispatch per sample")
+    return ContractProbe(
+        contract=contract, fn=_detector_observe,
+        args=(db._state, db._params, db._ring, db._rn, vals, act,
+              db._k_sigma, db._warm),
+        x64=True)
+
+
+def _scalar_detector_probe():
+    from ..analysis.contracts import host_probe
+    return host_probe("detector backend:scalar",
+                      "per-metric float64 NumPy detectors — the reference "
+                      "oracle, no XLA dispatch")
+
+
+DETECTOR_BACKENDS.attach_contract("bank", _bank_detector_probe)
+DETECTOR_BACKENDS.attach_contract("scalar", _scalar_detector_probe)
+
+
 @dataclass
 class RecoveryTracker:
     """Tracks the anomalous-state span across several metric detectors.

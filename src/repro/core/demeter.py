@@ -105,6 +105,43 @@ def _fit_bank(datasets: Sequence[Tuple[np.ndarray, np.ndarray]],
     return [bank.member(i) for i in range(len(datasets))]
 
 
+def _fit_bank_probe():
+    """Contract for the bank fitter's hot dispatch (``_fit_packed``): a
+    float32 fused L-BFGS batch — one HLO ``while`` loop, no float64
+    intermediates, no host callbacks hiding in the line search."""
+    import jax.numpy as jnp
+
+    from ..analysis.contracts import CompilationContract, ContractProbe
+    from .gp_bank import _fit_packed
+
+    rng = np.random.default_rng(0)
+    B, n, d = 2, 6, 3
+    x = jnp.asarray(rng.random((B, n, d)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((B, n)), jnp.float32)
+    mask = jnp.ones((B, n), jnp.float32)
+    t0s = jnp.asarray(rng.standard_normal((B, FIT_RESTARTS, d + 2)) * 0.1,
+                      jnp.float32)
+    contract = CompilationContract(
+        name="fit backend:bank",
+        required_hlo=("while",),      # the L-BFGS loop must stay a loop
+        dtype_ceiling="float32",
+        forbid_callbacks=True,
+        note="vmapped multi-restart L-BFGS over the packed GP batch")
+    return ContractProbe(contract=contract, fn=_fit_packed,
+                         args=(x, y, mask, t0s), kwargs={"max_iter": 8})
+
+
+def _fit_scalar_probe():
+    from ..analysis.contracts import host_probe
+    return host_probe("fit backend:scalar",
+                      "per-GP scipy L-BFGS-B reference oracle — no XLA "
+                      "dispatch")
+
+
+FIT_BACKENDS.attach_contract("bank", _fit_bank_probe)
+FIT_BACKENDS.attach_contract("scalar", _fit_scalar_probe)
+
+
 @dataclass
 class ModelBank:
     """Per-(segment, metric) GPs + RGPE ensembles with dirty-tracking.

@@ -245,11 +245,18 @@ def _arima_chunk_roll(state: _ArimaState, params: _ArimaParams,
     return state, _arima_roll(state, params, steps)
 
 
-_arima_chunk_jit = partial(jax.jit,
-                           static_argnames=("use_pallas",))(_arima_chunk)
+# Chunk dispatches rebind ``self.state`` to their output, so the old state
+# pytree is donated: every flush updates the bank's buffers in place instead
+# of allocating a second copy of the (B, k, k) covariances per tick (pinned
+# by the FORECAST_BACKENDS "bank" compilation contract, donation=True).
+# ``_*_roll_jit`` reads state without rebinding — donating there would
+# invalidate the live buffers.
+_arima_chunk_jit = partial(jax.jit, static_argnames=("use_pallas",),
+                           donate_argnums=(0,))(_arima_chunk)
 _arima_roll_jit = partial(jax.jit, static_argnames=("steps",))(_arima_roll)
 _arima_chunk_roll_jit = partial(
-    jax.jit, static_argnames=("steps", "use_pallas"))(_arima_chunk_roll)
+    jax.jit, static_argnames=("steps", "use_pallas"),
+    donate_argnums=(0,))(_arima_chunk_roll)
 
 
 # ---------------------------------------------------------------------------
@@ -333,10 +340,10 @@ def _holt_chunk_roll(state: _HoltState, params: _HoltParams,
     return state, _holt_roll(state, params, steps)
 
 
-_holt_chunk_jit = jax.jit(_holt_chunk)
+_holt_chunk_jit = jax.jit(_holt_chunk, donate_argnums=(0,))
 _holt_roll_jit = partial(jax.jit, static_argnames=("steps",))(_holt_roll)
-_holt_chunk_roll_jit = partial(jax.jit,
-                               static_argnames=("steps",))(_holt_chunk_roll)
+_holt_chunk_roll_jit = partial(jax.jit, static_argnames=("steps",),
+                               donate_argnums=(0,))(_holt_chunk_roll)
 
 
 # ---------------------------------------------------------------------------
@@ -399,10 +406,10 @@ def _snaive_chunk_roll(state: _SNaiveState, params: _SNaiveParams,
     return state, _snaive_roll(state, params, steps)
 
 
-_snaive_chunk_jit = jax.jit(_snaive_chunk)
+_snaive_chunk_jit = jax.jit(_snaive_chunk, donate_argnums=(0,))
 _snaive_roll_jit = partial(jax.jit, static_argnames=("steps",))(_snaive_roll)
 _snaive_chunk_roll_jit = partial(
-    jax.jit, static_argnames=("steps",))(_snaive_chunk_roll)
+    jax.jit, static_argnames=("steps",), donate_argnums=(0,))(_snaive_chunk_roll)
 
 
 # ---------------------------------------------------------------------------
@@ -870,6 +877,76 @@ def make_forecaster(kind: str = "arima", *, backend: str = "bank",
     return factory(kind, horizon=horizon, use_pallas=use_pallas, **kwargs)
 
 
+def _bank_forecaster_probes():
+    """Contracts for the banked forecaster's two hot dispatches:
+
+    * the fused chunk-replay + rollout (``_arima_chunk_roll_jit``) — the
+      per-read-epoch dispatch. State donation must survive compilation
+      (every flush updates the bank's buffers in place), float64 is the
+      *ceiling by design* (the bank mirrors the float64 NumPy zoo
+      bit-for-bit), no callback may hide inside the scan body, and the
+      chunk-length bucketing must hold the trace count at the bucket
+      count, not the call count;
+    * the Pallas RLS kernel lowering (``repro.kernels.rls_update``) —
+      checked against the contract colocated with the kernel.
+    """
+    from ..analysis.contracts import (CompilationContract, ContractProbe,
+                                      count_traces)
+    from ..kernels.rls_update import rls_contract, rls_rank1_update
+
+    with enable_x64():
+        fam = _ArimaBank([dict(p=4, d=1)] * 4)
+        state, params = fam.state, fam.params
+        chunk = jnp.asarray(np.where(np.arange(8)[:, None] < 6,
+                                     np.linspace(1.0, 4.0, 32).reshape(8, 4),
+                                     np.nan))
+        buckets = {t: jnp.asarray(np.full((t, 4), 2.0)) for t in (4, 8, 12)}
+
+    def _bucketed_traces() -> int:
+        # The _take_chunk buckets (exact <= 4, multiples of 4 beyond) must
+        # hold the jit cache at #buckets even when flush lengths vary.
+        workload = [((state, params, buckets[t]),
+                     dict(steps=10, use_pallas=False))
+                    for t in (4, 4, 8, 8, 12)]
+        return count_traces(_arima_chunk_roll, workload, x64=True,
+                            static_argnames=("steps", "use_pallas"))
+
+    chunk_contract = CompilationContract(
+        name="forecast backend:bank",
+        donation=True,                 # state buffers update in place
+        dtype_ceiling="float64",       # mirrors the float64 NumPy zoo
+        forbid_callbacks=True,
+        max_traces=3,                  # one per chunk-length bucket above
+        note="fused ARIMA chunk replay + rollout (one dispatch per read "
+             "epoch)")
+    chunk_probe = ContractProbe(
+        contract=chunk_contract, fn=_arima_chunk_roll_jit,
+        args=(state, params, chunk), kwargs=dict(steps=10, use_pallas=False),
+        x64=True, traces=_bucketed_traces)
+
+    k = int(state.w.shape[1])
+    pallas_probe = ContractProbe(
+        contract=rls_contract(),
+        fn=rls_rank1_update,
+        args=(jnp.eye(k)[None].repeat(8, 0).astype(jnp.float32),
+              jnp.ones((8, k), jnp.float32),
+              jnp.full((8,), 0.995, jnp.float32)),
+        kwargs=dict(interpret=True),
+        note="interpret-mode lowering (CPU); Mosaic on TPU")
+    return [chunk_probe, pallas_probe]
+
+
+def _scalar_forecaster_probe():
+    from ..analysis.contracts import host_probe
+    return host_probe("forecast backend:scalar",
+                      "float64 NumPy zoo member — the reference oracle, no "
+                      "XLA dispatch")
+
+
+FORECAST_BACKENDS.attach_contract("bank", _bank_forecaster_probes)
+FORECAST_BACKENDS.attach_contract("scalar", _scalar_forecaster_probe)
+
+
 # ---------------------------------------------------------------------------
 # DetectorBank: batched §2.3 anomaly detectors
 # ---------------------------------------------------------------------------
@@ -894,7 +971,9 @@ def _mad_threshold(ring: jnp.ndarray, rn: jnp.ndarray, k_sigma: jnp.ndarray,
     return jnp.where(cnt >= warm, thr, jnp.inf)
 
 
-@jax.jit
+# state / ring / rn are rebound to the outputs every sample (the per-tick
+# hot path), so their old buffers are donated; params are read-only.
+@partial(jax.jit, donate_argnums=(0, 2, 3))
 def _detector_observe(state: _ArimaState, params: _ArimaParams,
                       ring: jnp.ndarray, rn: jnp.ndarray,
                       values: jnp.ndarray, active: jnp.ndarray,

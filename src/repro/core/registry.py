@@ -55,6 +55,7 @@ class Registry(Generic[T]):
     def __init__(self, kind: str):
         self.kind = kind
         self._entries: Dict[str, T] = {}
+        self._contracts: Dict[str, Callable] = {}
 
     # -- registration -------------------------------------------------------
     def register(self, name: str, obj: Optional[T] = None, *,
@@ -74,12 +75,48 @@ class Registry(Generic[T]):
                     f"{self.kind} {name!r} is already registered; pass "
                     f"override=True to replace it")
             self._entries[name] = o
+            # An override's contract no longer describes the entry.
+            self._contracts.pop(name, None)
             return o
 
         return _install if obj is None else _install(obj)
 
     def unregister(self, name: str) -> None:
         self._entries.pop(name, None)
+        self._contracts.pop(name, None)
+
+    # -- compilation contracts ----------------------------------------------
+    def attach_contract(self, name: str, probe_factory: Callable) -> None:
+        """Attach a compilation-contract probe factory to entry ``name``.
+
+        ``probe_factory`` is a zero-argument callable returning a
+        :class:`repro.analysis.contracts.ContractProbe` (or a list of
+        them): the entry's hot-path function, example arguments and the
+        :class:`~repro.analysis.contracts.CompilationContract` it must
+        satisfy. Factories run only when contracts are *checked*
+        (``scripts/check_contracts.py``, ``tests/test_analysis.py``) —
+        attaching is free at import time.
+
+        Every entry of the four execution registries is expected to carry
+        one; ``check_contracts.py`` treats a missing contract as a failure
+        so new backends cannot silently skip the analyzer.
+        """
+        self.get(name)          # canonical unknown-name error shape
+        self._contracts[name] = probe_factory
+
+    def contract_for(self, name: str) -> Callable:
+        """The probe factory attached to ``name`` (canonical error when the
+        entry exists but never attached one)."""
+        self.get(name)
+        try:
+            return self._contracts[name]
+        except KeyError:
+            raise ValueError(
+                f"{self.kind} {name!r} has no attached compilation "
+                f"contract; register one with attach_contract") from None
+
+    def has_contract(self, name: str) -> bool:
+        return name in self._contracts
 
     # -- lookup -------------------------------------------------------------
     def get(self, name: str) -> T:

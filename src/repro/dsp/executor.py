@@ -492,17 +492,32 @@ class ShardedSweepExecutor(SweepExecutorBase):
                               st.task_slots, self._cap_base))
         return self._dev_cfg
 
-    def lower_step(self):
-        """The jitted step lowered for this executor's mesh (introspection
-        hook: the differential harness asserts the compiled module contains
-        no cross-scenario collectives)."""
-        st = self.state
+    def _step_operands(self) -> tuple:
+        """One full positional operand tuple for ``step_batch_arrays``
+        (dummy rate/flag rows), shared by :meth:`lower_step` and
+        :meth:`contract_probe` so introspection always sees the exact
+        argument layout of the real dispatch."""
         zeros = np.zeros(self.n_rows)
         flags = np.zeros(self.n_rows, bool)
-        with _x64():
-            return self._step_fn.lower(
-                self.model, self._lag, zeros, zeros, *self._device_configs(),
+        return (self.model, self._lag, zeros, zeros, *self._device_configs(),
                 flags, flags, zeros, zeros, self.dt)
+
+    def lower_step(self):
+        """The jitted step lowered for this executor's mesh (introspection
+        hook; :meth:`contract_probe` is the contract-checked face of it)."""
+        with _x64():
+            return self._step_fn.lower(*self._step_operands())
+
+    def contract_probe(self):
+        """This executor's step packaged for
+        :func:`repro.analysis.contracts.run_probe`: the compiled module must
+        contain zero cross-scenario collectives and must honor the
+        consumer-lag donation (see :data:`SHARDED_STEP_CONTRACT`)."""
+        from ..analysis.contracts import ContractProbe
+        args = self._step_operands()
+        return ContractProbe(contract=SHARDED_STEP_CONTRACT, fn=self._step_fn,
+                             args=args, x64=True,
+                             static_argnums=(0, len(args) - 1))
 
     # -- stepping -----------------------------------------------------------
     def _step_impl(self, rates: np.ndarray, dt: float
@@ -610,3 +625,49 @@ class ScalarSweepExecutor(SweepExecutorBase):
 
     def caught_up(self) -> np.ndarray:
         return np.array([j.caught_up for j in self.jobs])
+
+
+# ---------------------------------------------------------------------------
+# compilation contracts (see repro.analysis and docs/ANALYSIS.md)
+# ---------------------------------------------------------------------------
+
+def _sharded_step_contract():
+    from ..analysis.contracts import COLLECTIVE_HLO_OPS, CompilationContract
+    return CompilationContract(
+        name="engine:sharded",
+        # The scenario axis is struct-of-arrays and every per-step operation
+        # is elementwise over it, so sharding must be communication-free.
+        forbidden_hlo=COLLECTIVE_HLO_OPS,
+        # The consumer-lag vector is the one persistent device buffer;
+        # its donation must survive in the compiled module.
+        donation=True,
+        # float64 is deliberate: the sharded step mirrors the float64 numpy
+        # engine bit-for-bit (pinned by tests/test_sweep_sharded.py).
+        dtype_ceiling="float64",
+        max_primitives=256,
+        forbid_callbacks=True,
+        note="scenario-sharded sim step: zero cross-scenario collectives, "
+             "lag buffer donated, no host round-trips")
+
+
+#: The sharded engine's step invariants (constructing the declarative
+#: contract is jax-free; only *checking* it compiles anything).
+SHARDED_STEP_CONTRACT = _sharded_step_contract()
+
+
+def _sharded_probe():
+    ex = ShardedSweepExecutor(ClusterModel(), [JobConfig(), JobConfig()],
+                              seeds=[0, 1], dt=5.0, n_steps=4)
+    return ex.contract_probe()
+
+
+def _host_engine_probe(name: str, why: str):
+    from ..analysis.contracts import host_probe
+    return host_probe(f"engine:{name}", why)
+
+
+SIM_ENGINES.attach_contract("sharded", _sharded_probe)
+SIM_ENGINES.attach_contract("batched", lambda: _host_engine_probe(
+    "batched", "vectorized numpy stepping — no XLA dispatch to pin"))
+SIM_ENGINES.attach_contract("scalar", lambda: _host_engine_probe(
+    "scalar", "per-job python reference oracle — no XLA dispatch to pin"))

@@ -300,7 +300,10 @@ def step_batch_arrays(model: ClusterModel, lag: "jnp.ndarray",
         "consumer_lag": new_lag, "latency": latency,
         "utilization": util, "usage_cpu": usage_cpu,
         "usage_mem_mb": usage_mem,
-        "down": down_post.astype(jnp.float64),
+        # Deliberate f64: the whole sharded step runs under enable_x64 to
+        # match the float64 numpy engine bit-for-bit (see the "sharded"
+        # engine's compilation contract, dtype_ceiling="float64").
+        "down": down_post.astype(jnp.float64),  # noqa: REPRO-005
     }
 
 

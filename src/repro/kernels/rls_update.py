@@ -71,3 +71,17 @@ def rls_rank1_update(P: jnp.ndarray, phi: jnp.ndarray, lam: jnp.ndarray, *,
     if pad:
         gain, pnew = gain[:B], pnew[:B]
     return gain, pnew
+
+
+def rls_contract():
+    """Compilation contract for the kernel's lowering (checked through the
+    FORECAST_BACKENDS registry, see docs/ANALYSIS.md): whether it lowers to
+    Mosaic (TPU) or interpret-mode XLA (CPU), the dispatch must stay free of
+    host callbacks and cross-device collectives — the grid is fully
+    parallel over covariance blocks."""
+    from ..analysis.contracts import COLLECTIVE_HLO_OPS, CompilationContract
+    return CompilationContract(
+        name="kernel:rls-rank1-update",
+        forbidden_hlo=COLLECTIVE_HLO_OPS,
+        forbid_callbacks=True,
+        note="batched rank-1 RLS covariance update (Pallas)")

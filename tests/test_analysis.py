@@ -1,0 +1,412 @@
+"""The compilation-contract analyzer and the repro lint.
+
+Three layers:
+
+* contract fields — a known-good and a known-bad fixture per
+  :class:`~repro.analysis.contracts.CompilationContract` field;
+* lint rules — a firing and a non-firing snippet per REPRO-00x rule, plus
+  noqa/scoping/baseline mechanics;
+* integration — every registered backend exposes a contract and passes it,
+  and ``scripts/check_contracts.py --seed-violation`` turns the exit code
+  red.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (CALLBACK_PRIMITIVES,
+                                      COLLECTIVE_HLO_OPS,
+                                      CompilationContract, ContractProbe,
+                                      check_contract, count_traces,
+                                      host_probe, jaxpr_summary, run_probe)
+from repro.analysis.lint import (RULES, LintFinding, diff_against_baseline,
+                                 lint_source)
+from repro.core.registry import Registry
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _violating_fields(report):
+    return {v.field for v in report.violations}
+
+
+# ---------------------------------------------------------------------------
+# contract fields: one good + one bad fixture each
+# ---------------------------------------------------------------------------
+
+class TestContractFields:
+    def test_empty_contract_passes_trivially(self):
+        rep = check_contract(lambda x: x + 1.0,
+                             (jnp.ones(4),), CompilationContract())
+        assert rep.ok and rep.n_primitives >= 1
+
+    def test_forbidden_hlo(self):
+        fn = lambda a: a @ a                              # noqa: E731
+        args = (jnp.ones((8, 8)),)
+        bad = check_contract(fn, args,
+                             CompilationContract(forbidden_hlo=("dot",)))
+        good = check_contract(fn, args,
+                              CompilationContract(forbidden_hlo=("while",)))
+        assert not bad.ok and _violating_fields(bad) == {"forbidden_hlo"}
+        assert good.ok
+
+    def test_required_hlo(self):
+        def loop(x):
+            return jax.lax.while_loop(lambda c: c[0] < 5,
+                                      lambda c: (c[0] + 1, c[1] * 2.0),
+                                      (0, x))[1]
+        args = (jnp.ones(4),)
+        good = check_contract(loop, args,
+                              CompilationContract(required_hlo=("while",)))
+        bad = check_contract(lambda x: x + 1.0, args,
+                             CompilationContract(required_hlo=("while",)))
+        assert good.ok
+        assert not bad.ok and _violating_fields(bad) == {"required_hlo"}
+
+    def test_donation(self):
+        def step(state, delta):
+            return state + delta
+        args = (jnp.ones(16), jnp.ones(16))
+        donated = jax.jit(step, donate_argnums=(0,))
+        good = check_contract(donated, args,
+                              CompilationContract(donation=True))
+        bad = check_contract(jax.jit(step), args,
+                             CompilationContract(donation=True))
+        assert good.ok
+        assert not bad.ok and _violating_fields(bad) == {"donation"}
+
+    def test_max_primitives(self):
+        fn = lambda x: x * 2 + 1 - x / 3                  # noqa: E731
+        args = (jnp.ones(4),)
+        good = check_contract(fn, args,
+                              CompilationContract(max_primitives=32))
+        bad = check_contract(fn, args,
+                             CompilationContract(max_primitives=1))
+        assert good.ok
+        assert not bad.ok and _violating_fields(bad) == {"max_primitives"}
+        # The breakdown names the offending primitives.
+        assert "primitives > budget" in str(bad.violations[0])
+
+    def test_dtype_ceiling(self):
+        fn = lambda x: x.astype(jnp.float64) * 2.0        # noqa: E731
+        args = (jnp.ones(4, jnp.float32),)
+        bad = check_contract(fn, args,
+                             CompilationContract(dtype_ceiling="float32"),
+                             x64=True)
+        good = check_contract(fn, args,
+                              CompilationContract(dtype_ceiling="float64"),
+                              x64=True)
+        assert not bad.ok and _violating_fields(bad) == {"dtype_ceiling"}
+        assert good.ok and "float64" in good.dtypes
+
+    def test_forbid_callbacks_in_scan_body(self):
+        def noisy(x):
+            def body(c, _):
+                jax.debug.print("c={c}", c=c)
+                return c + jnp.sum(x), None
+            return jax.lax.scan(body, 0.0, None, length=3)[0]
+        bad = check_contract(noisy, (jnp.ones(4),),
+                             CompilationContract(forbid_callbacks=True))
+        assert not bad.ok and _violating_fields(bad) == {"forbid_callbacks"}
+        assert "scan/while body" in str(bad.violations[0])
+        ok = check_contract(noisy, (jnp.ones(4),),
+                            CompilationContract(forbid_callbacks=False))
+        assert ok.ok
+
+    def test_forbid_callbacks_outside_loop(self):
+        def noisy(x):
+            jax.debug.print("x={x}", x=x)
+            return x + 1.0
+        bad = check_contract(noisy, (jnp.ones(4),),
+                             CompilationContract(forbid_callbacks=True))
+        assert not bad.ok
+        assert "in the traced body" in str(bad.violations[0])
+
+    def test_max_traces(self):
+        fn = lambda x: x * 2.0                            # noqa: E731
+        # Three shapes -> three traces on a fresh jit.
+        workload = [((jnp.ones(n),), {}) for n in (2, 3, 3, 4)]
+        n = count_traces(fn, workload)
+        assert n == 3
+        bad = check_contract(fn, (jnp.ones(2),),
+                             CompilationContract(max_traces=2), n_traces=n)
+        good = check_contract(fn, (jnp.ones(2),),
+                              CompilationContract(max_traces=3), n_traces=n)
+        assert not bad.ok and _violating_fields(bad) == {"max_traces"}
+        assert good.ok
+
+    def test_static_argnums_skip_nonarray_operands(self):
+        def fn(tag, x, scale):
+            assert isinstance(tag, str)
+            return x * scale
+        jitted = jax.jit(fn, static_argnums=(0, 2))
+        rep = check_contract(jitted, ("hot", jnp.ones(4), 2.0),
+                             CompilationContract(), static_argnums=(0, 2))
+        assert rep.ok
+
+    def test_jaxpr_summary_descends_into_scan(self):
+        def fn(x):
+            return jax.lax.scan(lambda c, _: (c * 2.0, None), x, None,
+                                length=3)[0]
+        prims, _ = jaxpr_summary(jax.make_jaxpr(fn)(jnp.ones(2)))
+        in_loop = [p for p, loop in prims if loop]
+        assert "mul" in in_loop
+
+
+# ---------------------------------------------------------------------------
+# probes + registry attachment
+# ---------------------------------------------------------------------------
+
+class TestProbesAndRegistry:
+    def test_host_probe_passes_with_note(self):
+        rep = run_probe(host_probe("x:y", "numpy oracle"))
+        assert rep.ok and "numpy oracle" in rep.note
+
+    def test_run_probe_checks_contract(self):
+        probe = ContractProbe(
+            contract=CompilationContract(name="t", max_primitives=1),
+            fn=lambda x: x * 2 + 1, args=(jnp.ones(2),))
+        rep = run_probe(probe)
+        assert not rep.ok and rep.name == "t"
+
+    def test_attach_requires_registered_name(self):
+        reg = Registry("widget")
+        with pytest.raises(ValueError, match="unknown widget"):
+            reg.attach_contract("nope", lambda: None)
+
+    def test_contract_for_missing_raises(self):
+        reg = Registry("widget")
+        reg.register("a", object())
+        with pytest.raises(ValueError, match="no attached compilation"):
+            reg.contract_for("a")
+        assert not reg.has_contract("a")
+
+    def test_unregister_and_override_pop_contract(self):
+        reg = Registry("widget")
+        reg.register("a", object())
+        reg.attach_contract("a", lambda: host_probe("a", ""))
+        assert reg.has_contract("a")
+        reg.register("a", object(), override=True)
+        assert not reg.has_contract("a")      # stale contract dropped
+        reg.attach_contract("a", lambda: host_probe("a", ""))
+        reg.unregister("a")
+        reg.register("a", object())
+        assert not reg.has_contract("a")
+
+    def test_every_registered_backend_has_a_passing_contract(self):
+        import repro.core.anomaly          # noqa: F401
+        import repro.core.demeter          # noqa: F401
+        import repro.core.forecast_bank    # noqa: F401
+        import repro.dsp.executor          # noqa: F401
+        from repro.core.registry import (DETECTOR_BACKENDS, FIT_BACKENDS,
+                                         FORECAST_BACKENDS, SIM_ENGINES)
+        for reg in (SIM_ENGINES, FIT_BACKENDS, FORECAST_BACKENDS,
+                    DETECTOR_BACKENDS):
+            for name in reg:
+                assert reg.has_contract(name), \
+                    f"{reg.kind}:{name} registered without a contract"
+                probes = reg.contract_for(name)()
+                for p in (probes if isinstance(probes, list) else [probes]):
+                    rep = run_probe(p)
+                    assert rep.ok, rep.summary()
+
+    def test_sharded_contract_forbids_collectives_and_pins_donation(self):
+        from repro.dsp.executor import SHARDED_STEP_CONTRACT
+        assert set(COLLECTIVE_HLO_OPS) <= set(
+            SHARDED_STEP_CONTRACT.forbidden_hlo)
+        assert SHARDED_STEP_CONTRACT.donation is True
+
+
+# ---------------------------------------------------------------------------
+# lint rules: firing + non-firing snippet per rule
+# ---------------------------------------------------------------------------
+
+def _codes(findings):
+    return [f.rule for f in findings]
+
+
+class TestLintRules:
+    def test_rule_001_np_call_in_jit_body(self):
+        bad = ("import jax, numpy as np\n"
+               "@jax.jit\n"
+               "def f(x):\n"
+               "    return np.sum(x)\n")
+        good = bad.replace("np.sum", "jnp.sum")
+        assert _codes(lint_source(bad, "src/repro/core/m.py")) == ["REPRO-001"]
+        assert lint_source(good, "src/repro/core/m.py") == []
+
+    def test_rule_001_matches_partial_jit(self):
+        bad = ("from functools import partial\n"
+               "import jax, numpy as np\n"
+               "@partial(jax.jit, static_argnames=('n',))\n"
+               "def f(x, n):\n"
+               "    return np.zeros(n) + x\n")
+        assert "REPRO-001" in _codes(lint_source(bad, "src/repro/core/m.py"))
+
+    def test_rule_002_key_reuse(self):
+        bad = ("import jax\n"
+               "def f(key):\n"
+               "    a = jax.random.normal(key, (3,))\n"
+               "    b = jax.random.uniform(key, (3,))\n"
+               "    return a + b\n")
+        good = ("import jax\n"
+                "def f(key):\n"
+                "    k1, key = jax.random.split(key)\n"
+                "    a = jax.random.normal(k1, (3,))\n"
+                "    key = jax.random.fold_in(key, 1)\n"
+                "    b = jax.random.uniform(key, (3,))\n"
+                "    return a + b\n")
+        assert _codes(lint_source(bad, "src/repro/core/m.py")) == ["REPRO-002"]
+        assert lint_source(good, "src/repro/core/m.py") == []
+
+    def test_rule_002_reassignment_resets_ledger(self):
+        ok = ("import jax\n"
+              "def f(key):\n"
+              "    a = jax.random.normal(key, (3,))\n"
+              "    key = jax.random.split(key)[0]\n"
+              "    b = jax.random.normal(key, (3,))\n"
+              "    return a + b\n")
+        assert lint_source(ok, "src/repro/core/m.py") == []
+
+    def test_rule_003_scenario_loop_in_bank_code(self):
+        bad = ("def step(self, rates):\n"
+               "    for i in range(self.n_scenarios):\n"
+               "        self.one(i)\n")
+        # Same code outside dsp/ or core/*bank* files: out of scope.
+        assert _codes(lint_source(bad, "src/repro/dsp/engine.py")) \
+            == ["REPRO-003"]
+        assert lint_source(bad, "src/repro/core/demeter.py") == []
+        good = ("def step(self, rates):\n"
+                "    for i in range(self.n_retries):\n"
+                "        self.one(i)\n")
+        assert lint_source(good, "src/repro/dsp/engine.py") == []
+
+    def test_rule_003_zip_over_jobs(self):
+        bad = ("def step(self, rates):\n"
+               "    for job, r in zip(self.jobs, rates):\n"
+               "        job.step(r)\n")
+        assert _codes(lint_source(bad, "src/repro/dsp/engine.py")) \
+            == ["REPRO-003"]
+
+    def test_rule_004_registry_poke(self):
+        bad = "CONTROLLERS._entries['mine'] = Thing()\n"
+        good = "CONTROLLERS.register('mine', Thing())\n"
+        assert _codes(lint_source(bad, "src/repro/dsp/plugin.py")) \
+            == ["REPRO-004"]
+        assert lint_source(good, "src/repro/dsp/plugin.py") == []
+        # Registry's own implementation is exempt.
+        assert lint_source(bad, "src/repro/core/registry.py") == []
+
+    def test_rule_005_f64_outside_oracles(self):
+        bad = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    return x.astype(jnp.float64)\n")
+        assert _codes(lint_source(bad, "src/repro/core/gp_bank.py")) \
+            == ["REPRO-005"]
+        # Allow-listed oracle module: deliberate f64 is the point.
+        assert lint_source(bad, "src/repro/core/gp.py") == []
+        bad_str = ("def f(x):\n"
+                   "    return x.astype('float64')\n")
+        assert _codes(lint_source(bad_str, "src/repro/core/gp_bank.py")) \
+            == ["REPRO-005"]
+
+    def test_noqa_with_code_suppresses(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    return x.astype(jnp.float64)  # noqa: REPRO-005\n")
+        assert lint_source(src, "src/repro/core/gp_bank.py") == []
+
+    def test_bare_noqa_does_not_suppress(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    return x.astype(jnp.float64)  # noqa\n")
+        assert _codes(lint_source(src, "src/repro/core/gp_bank.py")) \
+            == ["REPRO-005"]
+
+    def test_syntax_error_reports_repro_000(self):
+        assert _codes(lint_source("def f(:\n", "src/x.py")) == ["REPRO-000"]
+
+    def test_rules_table_is_complete(self):
+        assert [r.code for r in RULES] == [
+            "REPRO-001", "REPRO-002", "REPRO-003", "REPRO-004", "REPRO-005"]
+        assert all(r.title and r.rationale for r in RULES)
+
+
+class TestBaseline:
+    def _finding(self, rule="REPRO-005", path="a.py", line=3,
+                 snippet="x.astype(jnp.float64)"):
+        return LintFinding(rule, path, line, 0, "msg", snippet)
+
+    def test_baselined_finding_is_not_new(self):
+        f = self._finding()
+        new, fixed = diff_against_baseline([f], [f.to_dict()])
+        assert new == [] and fixed == []
+
+    def test_line_drift_does_not_churn(self):
+        f = self._finding(line=3)
+        base = self._finding(line=99).to_dict()
+        new, fixed = diff_against_baseline([f], [base])
+        assert new == [] and fixed == []
+
+    def test_new_and_fixed(self):
+        cur = self._finding(snippet="b")
+        base = self._finding(snippet="a").to_dict()
+        new, fixed = diff_against_baseline([cur], [base])
+        assert [f.snippet for f in new] == ["b"]
+        assert [e["snippet"] for e in fixed] == ["a"]
+
+    def test_multiplicity(self):
+        f = self._finding()
+        new, _ = diff_against_baseline([f, f], [f.to_dict()])
+        assert len(new) == 1       # second occurrence is genuinely new
+
+
+# ---------------------------------------------------------------------------
+# the scripts (subprocess: what CI actually runs)
+# ---------------------------------------------------------------------------
+
+def _run(script, *argv):
+    # Inherit the full environment: a stripped env (no HOME etc.) sends
+    # jax's backend discovery into multi-minute timeout sleeps.
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / script), *argv],
+        capture_output=True, text=True, cwd=REPO, env=env)
+
+
+class TestScripts:
+    def test_seeded_violation_turns_red(self, tmp_path):
+        out = tmp_path / "contracts.json"
+        res = _run("check_contracts.py", "--seed-violation",
+                   "--only", "seeded-violation", "--json", str(out))
+        assert res.returncode == 1, res.stdout + res.stderr
+        payload = json.loads(out.read_text())
+        assert payload["ok"] is False
+        fields = {v["field"] for r in payload["reports"]
+                  for v in r["violations"]}
+        assert fields == {"donation", "dtype_ceiling", "forbid_callbacks"}
+
+    def test_host_only_entries_pass_quickly(self):
+        res = _run("check_contracts.py", "--only", "engine:batched")
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "1/1 contracts hold" in res.stdout
+
+    def test_lint_runner_is_clean_against_baseline(self, tmp_path):
+        out = tmp_path / "lint.json"
+        res = _run("lint_repro.py", "--json", str(out))
+        assert res.returncode == 0, res.stdout + res.stderr
+        payload = json.loads(out.read_text())
+        assert payload["ok"] is True and payload["new"] == []
+
+    def test_rules_listing(self):
+        res = _run("lint_repro.py", "--rules")
+        assert res.returncode == 0
+        for code in ("REPRO-001", "REPRO-005"):
+            assert code in res.stdout
