@@ -222,17 +222,19 @@ def main() -> None:
     sw.add_argument("--compare-scalar", action="store_true",
                     help="also run the scalar reference oracle; verify "
                          "equivalence and report the wall-clock speedup")
-    sw.add_argument("--engine", choices=("batched", "scalar", "sharded"),
+    sw.add_argument("--engine",
+                    choices=("batched", "scalar", "sharded", "fused"),
                     default="batched",
                     help="simulation engine: single-device vectorized "
-                         "(default), per-scenario reference oracle, or "
+                         "(default), per-scenario reference oracle, "
                          "device-sharded (needs >= 2 visible devices; on "
                          "CPU set XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N — see docs/SCALING.md)")
+                         "device_count=N — see docs/SCALING.md), or fused "
+                         "(whole decision intervals in one on-device scan)")
     sw.add_argument("--devices", type=int, default=None,
-                    help="scenario-mesh width for --engine sharded and the "
-                         "shared GP/forecast banks (default: all visible "
-                         "devices)")
+                    help="scenario-mesh width for --engine sharded/fused "
+                         "and the shared GP/forecast banks (default: all "
+                         "visible devices)")
     sw.add_argument("--fit-backend", choices=("bank", "scalar"),
                     default="bank",
                     help="Demeter GP fitting path: batched jitted GPBank "

@@ -10,6 +10,20 @@ cost_analysis of the SPMD-partitioned module reports per-device numbers
     compute_s    = flops / 197e12
     memory_s     = bytes_accessed / 819e9
     collective_s = collective_bytes / 50e9
+
+A second section reads the sweep-engine legs from
+``results/sweep_scaling.json`` (written by ``benchmarks/sweep_scaling.py
+--mode fused``) and derives the *dispatch roofline* for the sweep hot
+path: the batched engine pays one host->XLA dispatch per simulator tick,
+the fused engine pays one per decision interval, so
+
+    t_batched_tick = t_step + t_dispatch
+    t_fused_tick   = t_step + t_dispatch / K        (K ticks per interval)
+
+and the measured per-tick walls bound t_dispatch from above. The fused
+speedup ceiling is (t_step + t_dispatch) / t_step — near 1x on CPU where
+dispatch costs microseconds, and the 10x+ regime on accelerator meshes
+where the host round-trip dominates a small per-tick step.
 """
 from __future__ import annotations
 
@@ -122,13 +136,44 @@ def table(cells: Dict[str, RooflineCell]) -> str:
     return "\n".join(rows)
 
 
+def sweep_dispatch_table(path: str = "results/sweep_scaling.json") -> str:
+    """Fused-vs-batched dispatch roofline from measured sweep legs."""
+    with open(path) as f:
+        legs = json.load(f).get("fused", [])
+    base = next((r for r in legs
+                 if r["engine"] == "batched" and r["devices"] == 1), None)
+    if base is None or not any(r["engine"] == "fused" for r in legs):
+        return (f"# {path} has no fused-vs-batched legs — run "
+                "`python benchmarks/sweep_scaling.py --mode fused` first")
+    t_batched = base["sweep_wall_s"] / base["n_steps"]
+    rows = ["== sweep dispatch roofline (fused vs batched) ==",
+            f"{'engine':>8s} {'devices':>8s} {'tick_us':>9s} "
+            f"{'scen-steps/s':>13s} {'vs-batched':>11s} {'t_disp_us':>10s}"]
+    for r in legs:
+        t_tick = r["sweep_wall_s"] / r["n_steps"]
+        ratio = r["scenario_steps_per_s"] / base["scenario_steps_per_s"]
+        # Per-tick dispatch bound: what the fused scan amortized away.
+        # Negative means scan bookkeeping outweighed dispatch on this run
+        # (the CPU regime) — report 0, the roofline is dispatch-free.
+        t_disp = max(t_batched - t_tick, 0.0) if r["engine"] == "fused" \
+            else float("nan")
+        rows.append(f"{r['engine']:>8s} {r['devices']:8d} "
+                    f"{1e6 * t_tick:9.1f} "
+                    f"{r['scenario_steps_per_s']:13.0f} {ratio:11.2f}x "
+                    f"{1e6 * t_disp:10.1f}")
+    return "\n".join(rows)
+
+
 def main() -> None:
     if not os.path.exists("results/roofline_raw.json"):
         print("roofline_raw.json missing — run "
               "`python -m repro.launch.dryrun --mesh single --unroll "
               "--out results/roofline_raw.json` first")
-        return
-    print(table(load_cells()))
+    else:
+        print(table(load_cells()))
+    if os.path.exists("results/sweep_scaling.json"):
+        print()
+        print(sweep_dispatch_table())
 
 
 if __name__ == "__main__":

@@ -31,11 +31,13 @@ def main() -> None:
                     help="comma-separated forecaster kinds "
                          f"({','.join(FORECASTER_KINDS)}), cycled across "
                          "scenarios")
-    ap.add_argument("--engine", choices=("batched", "scalar", "sharded"),
+    ap.add_argument("--engine",
+                    choices=("batched", "scalar", "sharded", "fused"),
                     default="batched",
                     help="simulation engine; 'sharded' lays the scenario "
                          "axis over a device mesh (needs >= 2 visible "
-                         "devices; see docs/SCALING.md)")
+                         "devices; see docs/SCALING.md), 'fused' runs "
+                         "whole decision intervals in one on-device scan")
     ap.add_argument("--devices", type=int, default=None,
                     help="scenario-mesh width (default: all visible)")
     ap.add_argument("--verify", action="store_true",

@@ -37,6 +37,7 @@ def _registries():
     import repro.core.demeter          # noqa: F401
     import repro.core.forecast_bank    # noqa: F401
     import repro.dsp.executor          # noqa: F401
+    import repro.dsp.fused             # noqa: F401
     from repro.core.registry import (DETECTOR_BACKENDS, FIT_BACKENDS,
                                      FORECAST_BACKENDS, SIM_ENGINES)
     return (SIM_ENGINES, FIT_BACKENDS, FORECAST_BACKENDS, DETECTOR_BACKENDS)

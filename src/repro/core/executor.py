@@ -271,8 +271,11 @@ class EngineConfig:
     surface, before any work starts.
     """
 
-    #: Sweep simulation engine: "batched" (vectorized hot path) or "scalar"
-    #: (per-scenario SimJob reference oracle).
+    #: Sweep simulation engine: "batched" (vectorized numpy hot path),
+    #: "sharded" (the batched step over a scenario device mesh), "fused"
+    #: (whole decision intervals on-device in one donated-carry scan;
+    #: composes with ``devices``) or "scalar" (per-scenario SimJob
+    #: reference oracle).
     sim_backend: str = "batched"
     #: Demeter GP fitting path: "bank" (batched jitted GPBank) or "scalar"
     #: (per-GP scipy reference oracle).
@@ -287,11 +290,12 @@ class EngineConfig:
     #: Baseline-controller decision cadence (seconds).
     decision_interval_s: float = 60.0
     #: Width of the ``scenario`` device mesh: how many JAX devices the
-    #: sharded engine and the GP/forecast banks lay the scenario axis over.
-    #: ``None`` = all visible devices for ``sim_backend="sharded"``,
-    #: single-device dispatches for the banks. Validated against the
-    #: visible device count at construction (see docs/SCALING.md for
-    #: running multi-device on one CPU).
+    #: sharded/fused engines and the GP/forecast banks lay the scenario
+    #: axis over. ``None`` = all visible devices for
+    #: ``sim_backend="sharded"``/``"fused"``, single-device dispatches for
+    #: the banks. Validated against the visible device count at
+    #: construction (see docs/SCALING.md for running multi-device on one
+    #: CPU).
     devices: Optional[int] = None
 
     def __post_init__(self) -> None:

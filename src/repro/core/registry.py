@@ -168,8 +168,12 @@ FORECAST_BACKENDS: Registry = Registry("forecast backend")
 #: Anomaly-detector backends ("scalar" / "bank") for RecoveryTracker.
 DETECTOR_BACKENDS: Registry = Registry("detector backend")
 
-#: Sweep simulation engines ("batched" / "scalar" / "sharded"). Entries are
-#: sweep executor classes — :class:`~repro.core.executor.BatchExecutor`
-#: implementations that additionally provide the simulation-stepping
-#: surface; subclass :class:`repro.dsp.executor.SweepExecutorBase`.
+#: Sweep simulation engines ("batched" / "fused" / "scalar" / "sharded").
+#: Entries are sweep executor classes —
+#: :class:`~repro.core.executor.BatchExecutor` implementations that
+#: additionally provide the simulation-stepping surface; subclass
+#: :class:`repro.dsp.executor.SweepExecutorBase`. Engines that additionally
+#: expose ``supports_intervals = True`` + ``step_interval()`` (the
+#: ``"fused"`` engine) are driven whole-decision-interval-at-a-time by the
+#: sweep engine instead of per tick.
 SIM_ENGINES: Registry = Registry("engine")

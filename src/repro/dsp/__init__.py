@@ -6,6 +6,7 @@ from .baselines import (DS2Controller, ReactiveController, StaticController,
 from .executor import (BatchedSweepExecutor, DSPExecutor, ProfileCost,
                        ScalarSweepExecutor, ShardedSweepExecutor,
                        SweepExecutorBase)
+from .fused import FusedSweepExecutor
 from .policies import BaselinePolicy, DemeterPolicy, SweepPolicy
 from .runner import FailureRecord, RunResult, run_experiment
 from .simulator import (MAX_PARALLELISM, BatchState, ClusterModel, JobConfig,
@@ -30,7 +31,7 @@ __all__ = [
     "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
     "scenario_grid", "paper_grid", "run_sweep",
     # batched control plane
-    "BatchedSweepExecutor", "ScalarSweepExecutor", "ShardedSweepExecutor",
-    "SweepExecutorBase",
+    "BatchedSweepExecutor", "FusedSweepExecutor", "ScalarSweepExecutor",
+    "ShardedSweepExecutor", "SweepExecutorBase",
     "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
 ]

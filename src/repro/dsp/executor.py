@@ -547,9 +547,9 @@ class ShardedSweepExecutor(SweepExecutorBase):
                 self.model, self._lag, self._lag_add, r,
                 *self._device_configs(), down_pre, down_post, z1, z2, dt)
         self._lag_add = np.zeros(self.n_rows)
-        # Forced copy: the device buffer is donated into the next dispatch,
-        # so the host mirror must not alias it.
-        st.lag_events = np.array(self._lag)
+        # Forced copy (the device buffer is donated into the next dispatch,
+        # so the host mirror must not alias it).
+        st.from_device(self._lag)
         st.last_rate = r
         out = {k: np.asarray(v)[:S] for k, v in m.items()}
         return out

@@ -430,6 +430,48 @@ class BatchState:
               "checkpoint_interval_s", "lag_events", "downtime_left_s",
               "since_checkpoint_s", "last_rate")
 
+    # Every field is classified for the device-backed engines (sharded /
+    # fused), which keep a host BatchState mirror next to a donated device
+    # buffer. ``tests/test_simulator_props.py`` asserts the three groups
+    # partition FIELDS exactly, so adding a field without deciding which
+    # side of the host/device seam owns it is a test failure, not a silent
+    # mirror desync.
+    #: control-flow state the host mirror advances deterministically every
+    #: tick (downtime/checkpoint clocks, the last arrival rate failures
+    #: roll back against) — never read back from the device
+    HOST_MIRROR_FIELDS = ("downtime_left_s", "since_checkpoint_s",
+                          "last_rate")
+    #: state whose authoritative copy lives on-device between dispatches
+    #: (synced back through :meth:`from_device`)
+    DEVICE_FIELDS = ("lag_events",)
+    #: config-derived values that only change on reconfiguration
+    CONFIG_FIELDS = ("workers", "cpu_cores", "memory_mb", "task_slots",
+                     "checkpoint_interval_s")
+
+    def to_host_mirror(self, rngs: Optional["BatchedNormals"] = None
+                       ) -> Dict[str, np.ndarray]:
+        """Snapshot of everything the host side of a device-backed engine
+        owns: the :data:`HOST_MIRROR_FIELDS` clocks plus (when ``rngs`` is
+        given) the per-row RNG stream positions. Round-trips through
+        :meth:`from_host_mirror`."""
+        mirror = {f: getattr(self, f).copy()
+                  for f in self.HOST_MIRROR_FIELDS}
+        if rngs is not None:
+            mirror["rng_pos"] = rngs._pos.copy()
+        return mirror
+
+    def from_host_mirror(self, mirror: Mapping[str, np.ndarray]) -> None:
+        """Restore a :meth:`to_host_mirror` snapshot (RNG positions are the
+        caller's to restore — a Generator cannot be rewound)."""
+        for f in self.HOST_MIRROR_FIELDS:
+            setattr(self, f, np.array(mirror[f]))
+
+    def from_device(self, lag: "np.ndarray | jnp.ndarray") -> None:
+        """Adopt the device-resident consumer-lag buffer into the host
+        mirror as a **forced copy** (the device buffer is donated into the
+        next dispatch, so the mirror must never alias it)."""
+        self.lag_events = np.array(lag)
+
     def pad(self, n: int,
             fill_config: Optional[JobConfig] = None) -> "BatchState":
         """A copy padded to ``n`` rows (``n >= len(self)``).

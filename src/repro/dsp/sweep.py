@@ -12,11 +12,15 @@ a thin event loop over two pluggable surfaces:
   :class:`~repro.dsp.simulator.BatchState`; the registered ``"sharded"``
   engine lays the same axis over a ``scenario`` device mesh (jitted
   donated-buffer step, ragged grids padded to the mesh — see
-  ``docs/SCALING.md``); the registered ``"scalar"`` engine is the
-  per-scenario :class:`~repro.dsp.simulator.SimJob` reference oracle
-  (identical orchestration, bit-comparable results on a shared seed). See
+  ``docs/SCALING.md``); the registered ``"fused"`` engine moves whole
+  decision intervals on-device (one donated-carry ``lax.scan`` per
+  host-quiet run of ticks, driven through ``drive_intervals()`` below);
+  the registered ``"scalar"`` engine is the per-scenario
+  :class:`~repro.dsp.simulator.SimJob` reference oracle (identical
+  orchestration, bit-comparable results on a shared seed). See
   :class:`repro.dsp.executor.BatchedSweepExecutor` /
   :class:`~repro.dsp.executor.ShardedSweepExecutor` /
+  :class:`~repro.dsp.fused.FusedSweepExecutor` /
   :class:`~repro.dsp.executor.ScalarSweepExecutor`.
 * registered controller policies (:mod:`repro.dsp.policies`), invoked per
   decision/optimization interval — never per simulation step. Demeter
@@ -362,86 +366,185 @@ class SweepEngine:
         policy_next = np.array([p.initial_due(self) for p in policies])
         end_time = self.n_steps_each * self.dt
         uniform = bool(np.all(self.n_steps_each == self.n_steps))
+        ticks = np.arange(self.n_steps) * self.dt
 
-        t0 = time.perf_counter()
-        for i in range(self.n_steps):
-            t = i * self.dt
-            ex.step(self.R[:, i])
-            active = None if uniform else (t < end_time)
+        # The event loop is one set of bookkeeping helpers shared by two
+        # drivers: drive_ticks() wakes the host every simulator step (the
+        # numpy/sharded engines), drive_intervals() only at event
+        # boundaries, handing whole host-quiet runs of ticks to an
+        # interval-capable executor (the fused engine) in one dispatch.
+        # Both produce identical records — the four-way differential in
+        # tests/helpers/sharded_diff.py pins this.
 
-            # -- failure injection + Table-3 recovery bookkeeping ----------
-            due = t >= nf_time
-            if active is not None:
-                due &= active
-            injected = ()
-            if due.any():
-                injected = np.nonzero(due)[0]
-                for j in injected:
-                    ex.inject_failure(j)
-                    if j in pending:
-                        # previous failure never resolved before this one
-                        # landed: close it as NR rather than dropping it
-                        failures[j].append(pending[j])
-                    pending[j] = FailureRecord(t_inject=t,
-                                               workload=float(self.R[j, i]),
-                                               recovery_s=None)
-                    pending_reconf[j] = ex.reconf_count[j]
-                    next_fail[j] += 1
-                    ft = self.fail_times[j]
-                    nf_time[j] = ft[next_fail[j]] \
-                        if next_fail[j] < len(ft) else np.inf
-            if pending:
-                caught = ex.caught_up()
-                for j in [j for j in pending
-                          if j not in injected
-                          and (active is None or active[j])]:
-                    rec = pending[j]
-                    elapsed = t - rec.t_inject
-                    if ex.reconf_count[j] != pending_reconf[j]:
-                        rec.recovery_s = None       # NR: reconfig overlapped
-                    elif caught[j]:
-                        rec.recovery_s = elapsed
-                    elif elapsed > self.recovery_cap_s * 2:
-                        rec.recovery_s = float("inf")
-                        rec.capped = True
-                    else:
-                        continue
-                    failures[j].append(rec)
-                    del pending[j]
+        def advance_failure(j: int) -> None:
+            next_fail[j] += 1
+            ft = self.fail_times[j]
+            nf_time[j] = ft[next_fail[j]] \
+                if next_fail[j] < len(ft) else np.inf
 
-            # -- controller decisions (event-scheduled, not per-step) ------
+        def record_injections(t: float, i: int, injected) -> None:
+            for j in injected:
+                if j in pending:
+                    # previous failure never resolved before this one
+                    # landed: close it as NR rather than dropping it
+                    failures[j].append(pending[j])
+                pending[j] = FailureRecord(t_inject=t,
+                                           workload=float(self.R[j, i]),
+                                           recovery_s=None)
+                pending_reconf[j] = ex.reconf_count[j]
+
+        def close_pending(t: float, injected, active, caught) -> None:
+            """Table-3 recovery bookkeeping for one tick's pending records
+            (``caught`` is each scenario's caught-up flag after that tick)."""
+            for j in [j for j in pending
+                      if j not in injected
+                      and (active is None or active[j])]:
+                rec = pending[j]
+                elapsed = t - rec.t_inject
+                if ex.reconf_count[j] != pending_reconf[j]:
+                    rec.recovery_s = None           # NR: reconfig overlapped
+                elif caught[j]:
+                    rec.recovery_s = elapsed
+                elif elapsed > self.recovery_cap_s * 2:
+                    rec.recovery_s = float("inf")
+                    rec.capped = True
+                else:
+                    continue
+                failures[j].append(rec)
+                del pending[j]
+
+        def policy_block(t: float, i: int, active) -> None:
+            """Controller decisions (event-scheduled, never per-step)."""
+            nonlocal model_update_wall, n_model_fits, n_forecast_updates
             pol_due = t >= policy_next
             if active is not None:
                 pol_due &= active
-            if pol_due.any():
-                due = np.nonzero(pol_due)[0]
-                # One shared batched forecast update for every policy that
-                # staged telemetry: each due scenario's observation lands in
-                # the shared ForecastBank, which replays all queued ticks of
-                # all streams in one jitted lax.scan dispatch when the next
-                # policy reads a forecast (the scalar backend updates inline
-                # in the same timed region).
-                due_obs = [(policies[j],
-                            policies[j].pending_ingest(self, j, t, i))
-                           for j in due
-                           if hasattr(policies[j], "pending_ingest")]
-                for pol, obs in due_obs:
-                    if obs is not None:
-                        pol.ingest(obs)
-                        n_forecast_updates += 1
-                # One shared batched model-update for every controller due
-                # this tick: all stale (segment, metric) GPs across the
-                # whole grid are refitted in a single GPBank dispatch
-                # before any controller acts.
-                banks = [b for j in due
-                         if (b := getattr(policies[j], "bank", None))
-                         is not None]
-                if banks:
-                    n_fit, fit_wall = ModelBank.batch_refresh(banks)
-                    model_update_wall += fit_wall
-                    n_model_fits += n_fit
-                for j in due:
-                    policy_next[j] = policies[j].act(self, j, t, i)
+            if not pol_due.any():
+                return
+            due = np.nonzero(pol_due)[0]
+            # One shared batched forecast update for every policy that
+            # staged telemetry: each due scenario's observation lands in
+            # the shared ForecastBank, which replays all queued ticks of
+            # all streams in one jitted lax.scan dispatch when the next
+            # policy reads a forecast (the scalar backend updates inline
+            # in the same timed region).
+            due_obs = [(policies[j],
+                        policies[j].pending_ingest(self, j, t, i))
+                       for j in due
+                       if hasattr(policies[j], "pending_ingest")]
+            for pol, obs in due_obs:
+                if obs is not None:
+                    pol.ingest(obs)
+                    n_forecast_updates += 1
+            # One shared batched model-update for every controller due
+            # this tick: all stale (segment, metric) GPs across the
+            # whole grid are refitted in a single GPBank dispatch
+            # before any controller acts.
+            banks = [b for j in due
+                     if (b := getattr(policies[j], "bank", None))
+                     is not None]
+            if banks:
+                n_fit, fit_wall = ModelBank.batch_refresh(banks)
+                model_update_wall += fit_wall
+                n_model_fits += n_fit
+            for j in due:
+                policy_next[j] = policies[j].act(self, j, t, i)
+
+        def drive_ticks() -> None:
+            """Classic driver: one executor dispatch per simulator tick."""
+            for i in range(self.n_steps):
+                t = ticks[i]
+                ex.step(self.R[:, i])
+                active = None if uniform else (t < end_time)
+                due = t >= nf_time
+                if active is not None:
+                    due &= active
+                injected = ()
+                if due.any():
+                    injected = np.nonzero(due)[0]
+                    for j in injected:
+                        ex.inject_failure(j)
+                        advance_failure(j)
+                    record_injections(t, i, injected)
+                if pending:
+                    close_pending(t, injected, active, ex.caught_up())
+                policy_block(t, i, active)
+
+        def schedule_injections(i0: int, i1: int) -> Optional[np.ndarray]:
+            """Consume every failure due in ticks ``[i0, i1]`` into a
+            ``[K, S]`` bool injection plane (None when the interval is
+            failure-free).
+
+            A failure fires at the first tick whose time reaches it —
+            clamped past the previous injection's tick, which reproduces the
+            per-tick driver's behavior of landing already-due failures on
+            consecutive ticks. Failures whose tick falls beyond a
+            scenario's own duration are never injected (and never consumed:
+            the scenario is inactive from there on, exactly like the
+            per-tick driver's ``active`` mask)."""
+            inject = None
+            # Host event scheduling, not per-step work: failures are sparse
+            # (tens of minutes apart) and consuming them is O(failures), so
+            # this loop runs once per interval, outside the hot path.
+            for j in range(S):  # noqa: REPRO-003
+                k_prev = i0 - 1
+                while np.isfinite(nf_time[j]):
+                    kk = max(int(np.searchsorted(ticks, nf_time[j],
+                                                 side="left")), k_prev + 1)
+                    if kk >= self.n_steps_each[j]:
+                        break                     # inactive from here on
+                    if kk > i1:
+                        break                     # lands in a later interval
+                    if inject is None:
+                        inject = np.zeros((i1 - i0 + 1, S), dtype=bool)
+                    inject[kk - i0, j] = True
+                    advance_failure(j)
+                    k_prev = kk
+            return inject
+
+        def drive_intervals() -> None:
+            """Interval driver: the host wakes only at event boundaries.
+
+            Each pass advances to the earliest due policy tick (or the end
+            of the run), hands the whole tick range plus its precomputed
+            injection schedule to ``ex.step_interval`` as one dispatch, and
+            replays the recovery bookkeeping from the returned metric
+            planes — valid tick-by-tick because reconfiguration counts are
+            constant inside an interval and a non-injected scenario's
+            caught-up flag is exactly ``~down & lag < 1`` after its tick.
+            """
+            big = self.n_steps + 1
+            i = 0
+            while i < self.n_steps:
+                i_evt_each = np.searchsorted(ticks, policy_next, side="left")
+                i_evt_each = np.where(i_evt_each < self.n_steps_each,
+                                      i_evt_each, big)
+                i_evt = max(i, min(int(i_evt_each.min()), self.n_steps - 1))
+                inject = schedule_injections(i, i_evt)
+                ms = ex.step_interval(self.R[:, i:i_evt + 1].T, inject)
+                if inject is not None or pending:
+                    down = ms["down"].astype(bool)
+                    lag = ms["consumer_lag"]
+                    for k in range(i_evt - i + 1):
+                        injected = np.nonzero(inject[k])[0] \
+                            if inject is not None else ()
+                        if len(injected) == 0 and not pending:
+                            continue
+                        t = ticks[i + k]
+                        active = None if uniform else (t < end_time)
+                        record_injections(t, i + k, injected)
+                        if pending:
+                            close_pending(t, injected, active,
+                                          ~down[k] & (lag[k] < 1.0))
+                t = ticks[i_evt]
+                policy_block(t, i_evt, None if uniform else (t < end_time))
+                i = i_evt + 1
+
+        t0 = time.perf_counter()
+        if getattr(ex, "supports_intervals", False):
+            drive_intervals()
+        else:
+            drive_ticks()
         wall = time.perf_counter() - t0
         # Fold in lazy fits (segments first hit mid-act, cold starts).
         for p in policies:

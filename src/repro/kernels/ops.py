@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode_attention
 from .flash_attention import flash_attention as _flash_attention
+from .fused_tick import fused_tick as _fused_tick
 from .grouped_matmul import grouped_matmul as _grouped_matmul
 from .rls_update import rls_rank1_update as _rls_rank1_update
 from .rmsnorm import fused_rmsnorm as _fused_rmsnorm
@@ -45,3 +46,9 @@ def fused_rmsnorm(x, res, scale, **kw):
 
 def rls_rank1_update(P, phi, lam, **kw):
     return _rls_rank1_update(P, phi, lam, interpret=_interpret(), **kw)
+
+
+def fused_tick(lag, lag_add, rates, cap, down_pre, w, P, y_prev, lam,
+               thresh, dt, **kw):
+    return _fused_tick(lag, lag_add, rates, cap, down_pre, w, P, y_prev,
+                       lam, thresh, dt, interpret=_interpret(), **kw)

@@ -50,6 +50,39 @@ def rls_rank1_update_ref(P, phi, lam):
     return gain, pnew
 
 
+def fused_tick_ref(lag, lag_add, rates, cap, down_pre, w, P, y_prev,
+                   lam, thresh, dt):
+    """Fused simulator tick oracle: consumer-lag update + anomaly-detector
+    observe + rank-1 RLS update, pure jnp.
+
+    The lag update replicates the arithmetic of
+    :func:`repro.dsp.simulator.step_batch_arrays` operation-for-operation
+    (same expressions, same order), so composing this with the rest of the
+    metrics computation in the fused sweep scan stays bit-identical to the
+    un-fused step on the same backend. The detector is an AR(1)+bias RLS
+    predictor on ``y = log1p(lag)`` whose covariance recursion reuses
+    :func:`rls_rank1_update_ref`; ``flag`` marks prediction errors beyond
+    ``thresh``.
+
+    Shapes: ``lag/lag_add/rates/cap/down_pre/y_prev`` are ``(B,)``,
+    ``w`` is ``(B, 2)``, ``P`` is ``(B, 2, 2)``; ``lam``/``thresh``/``dt``
+    are scalars. Returns ``(new_lag, w', P', err, flag)``.
+    """
+    lag0 = lag + lag_add
+    demand = rates * dt + lag0
+    processed = jnp.minimum(cap * dt, demand)
+    new_lag = jnp.where(down_pre, lag0 + rates * dt, demand - processed)
+
+    y = jnp.log1p(new_lag)
+    phi = jnp.stack([jnp.ones_like(y_prev), y_prev], axis=-1)
+    err = y - jnp.einsum("bk,bk->b", w, phi)
+    flag = jnp.abs(err) > thresh
+    lam_b = jnp.full_like(y, lam)
+    gain, pnew = rls_rank1_update_ref(P, phi, lam_b)
+    w2 = w + gain * err[:, None]
+    return new_lag, w2, pnew, err, flag
+
+
 def fused_rmsnorm_ref(x, res, scale, eps: float = 1e-6):
     s = (x.astype(jnp.float32) + res.astype(jnp.float32))
     var = jnp.mean(jnp.square(s), -1, keepdims=True)

@@ -1,16 +1,21 @@
-"""Differential worker for the sharded sweep engine (subprocess side).
+"""Four-way differential worker for the sweep engines (subprocess side).
 
-Runs one named scenario set through the ``sharded`` / ``batched`` /
-``scalar`` engines in a fresh interpreter (so the parent test can pin the
-virtual-device count via ``XLA_FLAGS``) and asserts:
+Runs one named scenario set through the ``fused`` / ``sharded`` /
+``batched`` / ``scalar`` engines in a fresh interpreter (so the parent
+test can pin the virtual-device count via ``XLA_FLAGS``) and asserts:
 
-* ``sharded`` vs ``batched``: step-for-step :meth:`ScenarioResult.allclose`
+* ``fused`` vs ``batched``: step-for-step :meth:`ScenarioResult.allclose`
   at 1e-9 plus summary agreement at 1e-12 relative. Not bit-for-bit: the
   XLA:CPU backend contracts multiply-adds into FMAs, which perturbs the
   last ulp (see docs/SCALING.md); observed agreement is ~1e-15 relative.
+  The fused engine runs at every device count, *including 1* (interval
+  fusion does not require a mesh).
+* ``sharded`` vs ``batched``: the same bound (engine skipped when the
+  worker runs with a single device — ``sharded`` requires a mesh).
 * ``batched`` vs ``scalar``: bit-for-bit identical JSON digests (the
-  pre-existing invariant — the sharded engine must not disturb it).
-* the compiled sharded step contains **no cross-scenario collectives**.
+  pre-existing invariant — neither device engine may disturb it).
+* the compiled sharded step **and** the compiled fused interval scan
+  contain **no cross-scenario collectives**.
 
 Invoked by ``tests/test_sweep_sharded.py`` / ``tests/test_sweep_golden.py``
 through the ``run_under_devices`` fixture::
@@ -130,6 +135,8 @@ def check_reject() -> None:
             f"error is not actionable: {msg}"
     else:
         raise AssertionError("sharded accepted with one visible device")
+    # ... while the fused engine needs no mesh: one device is fine
+    assert EngineConfig(sim_backend="fused").sim_backend == "fused"
     # ... and the remedy actually names a working spelling
     print("REJECT-OK")
 
@@ -143,30 +150,52 @@ def run_case(case: str, devices: int) -> None:
     from repro.dsp.sweep import SweepEngine
 
     specs = _specs(case)
-    eng = SweepEngine(specs, config=EngineConfig(sim_backend="sharded",
-                                                 devices=devices))
-    sharded = eng.run()
     batched = run_sweep(specs)
     scalar = run_sweep(specs, config=EngineConfig(sim_backend="scalar"))
-    assert sharded.engine == "sharded"
-
-    # sharded executor actually padded/sharded the grid
-    ex = eng.executor
-    assert ex.n_devices == devices
-    assert ex.n_rows % devices == 0 and ex.n_rows >= len(specs)
-
-    # no cross-scenario collectives in the compiled step
-    compiled = ex.lower_step().compile().as_text()
-    present = [c for c in COLLECTIVES if c in compiled]
-    assert not present, f"collectives in sharded step: {present}"
-
-    for a, b, c in zip(sharded.scenarios, batched.scenarios,
-                       scalar.scenarios):
-        assert a.name == b.name == c.name
-        assert a.allclose(b), f"{a.name}: sharded != batched"
+    for b, c in zip(batched.scenarios, scalar.scenarios):
+        assert b.name == c.name
         assert b.allclose(c), f"{b.name}: batched != scalar"
-    _approx(_strip(sharded.to_json()), _strip(batched.to_json()), 1e-12)
     assert _strip(batched.to_json()) == _strip(scalar.to_json())
+
+    # fused engine: runs at every device count, including 1
+    feng = SweepEngine(specs, config=EngineConfig(sim_backend="fused",
+                                                  devices=devices))
+    fused = feng.run()
+    assert fused.engine == "fused"
+    fex = feng.executor
+    assert fex.n_devices == devices
+    assert fex.n_rows % devices == 0 and fex.n_rows >= len(specs)
+
+    # no cross-scenario collectives in the compiled interval scan
+    compiled = fex.lower_interval().compile().as_text()
+    present = [c for c in COLLECTIVES if c in compiled]
+    assert not present, f"collectives in fused interval scan: {present}"
+
+    for a, b in zip(fused.scenarios, batched.scenarios):
+        assert a.name == b.name
+        assert a.allclose(b), f"{a.name}: fused != batched"
+    _approx(_strip(fused.to_json()), _strip(batched.to_json()), 1e-12)
+
+    engines, sharded = ["fused", "batched", "scalar"], None
+    if devices >= 2:            # sharded requires a mesh
+        eng = SweepEngine(specs, config=EngineConfig(sim_backend="sharded",
+                                                     devices=devices))
+        sharded = eng.run()
+        assert sharded.engine == "sharded"
+        ex = eng.executor
+        assert ex.n_devices == devices
+        assert ex.n_rows % devices == 0 and ex.n_rows >= len(specs)
+
+        # no cross-scenario collectives in the compiled step
+        compiled = ex.lower_step().compile().as_text()
+        present = [c for c in COLLECTIVES if c in compiled]
+        assert not present, f"collectives in sharded step: {present}"
+
+        for a, b in zip(sharded.scenarios, batched.scenarios):
+            assert a.name == b.name
+            assert a.allclose(b), f"{a.name}: sharded != batched"
+        _approx(_strip(sharded.to_json()), _strip(batched.to_json()), 1e-12)
+        engines.insert(0, "sharded")
 
     if case == "golden":
         golden = json.loads(GOLDEN_PATH.read_text())
@@ -174,12 +203,18 @@ def run_case(case: str, devices: int) -> None:
             "scalar oracle drifted from tests/golden/sweep_small.json"
         assert _strip(batched.to_json()) == golden, \
             "batched engine drifted from tests/golden/sweep_small.json"
-        _approx(_strip(sharded.to_json()), golden, 1e-12)
+        _approx(_strip(fused.to_json()), golden, 1e-12)
+        if sharded is not None:
+            _approx(_strip(sharded.to_json()), golden, 1e-12)
     if case == "demeter":
-        assert sharded.n_model_fits == batched.n_model_fits
-        assert sharded.n_forecast_updates == batched.n_forecast_updates > 0
+        assert fused.n_model_fits == batched.n_model_fits
+        assert fused.n_forecast_updates == batched.n_forecast_updates > 0
+        if sharded is not None:
+            assert sharded.n_model_fits == batched.n_model_fits
+            assert sharded.n_forecast_updates == batched.n_forecast_updates
     print(f"DIFF-OK case={case} devices={devices} "
-          f"scenarios={len(specs)} rows={ex.n_rows}")
+          f"scenarios={len(specs)} rows={fex.n_rows} "
+          f"engines={'/'.join(engines)}")
 
 
 def make_golden() -> None:

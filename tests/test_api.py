@@ -22,9 +22,10 @@ from repro.core import (CONTROLLERS, EngineConfig, Registry, ScalarAdapter,
 from repro.core.demeter import DemeterController, DemeterHyperParams
 from repro.core.config_space import paper_flink_space
 from repro.dsp import (BatchedSweepExecutor, ClusterModel, DSPExecutor,
-                       JobConfig, NoFailures, ScalarSweepExecutor,
-                       ScenarioSpec, ShardedSweepExecutor, SweepEngine,
-                       make_trace, run_sweep, scenario_grid)
+                       FusedSweepExecutor, JobConfig, NoFailures,
+                       ScalarSweepExecutor, ScenarioSpec,
+                       ShardedSweepExecutor, SweepEngine, make_trace,
+                       run_sweep, scenario_grid)
 
 # ---------------------------------------------------------------------------
 # golden API snapshot
@@ -59,8 +60,8 @@ DSP_EXPORTS = {
     "FailureRecord",
     "ScenarioSpec", "ScenarioResult", "SweepEngine", "SweepResult",
     "scenario_grid", "paper_grid", "run_sweep",
-    "BatchedSweepExecutor", "ScalarSweepExecutor", "ShardedSweepExecutor",
-    "SweepExecutorBase",
+    "BatchedSweepExecutor", "FusedSweepExecutor", "ScalarSweepExecutor",
+    "ShardedSweepExecutor", "SweepExecutorBase",
     "BaselinePolicy", "DemeterPolicy", "SweepPolicy", "CONTROLLER_NAMES",
 }
 
@@ -102,8 +103,9 @@ class TestApiSnapshot:
                        "reconfigure", "observe", "observe_one", "profile",
                        "allocated_cost"):
             assert hasattr(core.BatchExecutor, method)
-            for impl in (BatchedSweepExecutor, ScalarSweepExecutor,
-                         ShardedSweepExecutor, ScalarAdapter):
+            for impl in (BatchedSweepExecutor, FusedSweepExecutor,
+                         ScalarSweepExecutor, ShardedSweepExecutor,
+                         ScalarAdapter):
                 assert callable(getattr(impl, method)), \
                     f"{impl.__name__} is missing {method}"
 
@@ -175,7 +177,8 @@ class TestEngineConfig:
     def test_run_sweep_rejects_unknown_engine_with_listing(self):
         spec = ScenarioSpec(trace=make_trace("diurnal", duration_s=60.0))
         with pytest.raises(ValueError, match=r"available: \('batched', "
-                                             r"'scalar', 'sharded'\)"), \
+                                             r"'fused', 'scalar', "
+                                             r"'sharded'\)"), \
                 warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             run_sweep([spec], engine="gpu")

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_tick import fused_tick
 from repro.kernels.grouped_matmul import (grouped_matmul,
                                           sort_tokens_for_experts)
 from repro.kernels.rmsnorm import fused_rmsnorm
@@ -137,6 +138,72 @@ class TestGroupedMatmul:
         for row, src in zip(out[mask], inv[mask]):
             want = x[src] @ rhs[eids[src]]
             np.testing.assert_allclose(row, want, atol=1e-3, rtol=1e-3)
+
+
+class TestFusedTick:
+    """Fused sweep tick (lag update + detector observe + rank-1 RLS) vs the
+    pure-jnp oracle the CPU path of the fused sweep engine runs. float64:
+    the DSP engines execute under enable_x64 to mirror the NumPy oracles."""
+
+    def _operands(self, n, seed=0):
+        rng = np.random.default_rng(seed)
+        return dict(
+            lag=jnp.asarray(rng.uniform(0.0, 1e5, n)),
+            lag_add=jnp.asarray(rng.uniform(0.0, 1e4, n)),
+            rates=jnp.asarray(rng.uniform(1e4, 9e4, n)),
+            cap=jnp.asarray(rng.uniform(1e4, 8e4, n)),
+            down_pre=jnp.asarray(rng.random(n) < 0.3),
+            w=jnp.asarray(rng.normal(size=(n, 2)) * 0.1),
+            P=jnp.asarray(np.broadcast_to(10.0 * np.eye(2),
+                                          (n, 2, 2)).copy()),
+            y_prev=jnp.asarray(rng.uniform(0.0, 12.0, n)),
+        )
+
+    @pytest.mark.parametrize("n", [3, 8, 37])   # sub-block, exact, ragged
+    def test_matches_reference(self, n):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            ops = self._operands(n, seed=n)
+            got = fused_tick(**ops, lam=0.995, thresh=3.0, dt=5.0,
+                             interpret=True)
+            want = ref.fused_tick_ref(
+                ops["lag"], ops["lag_add"], ops["rates"], ops["cap"],
+                ops["down_pre"], ops["w"], ops["P"], ops["y_prev"],
+                0.995, 3.0, 5.0)
+        names = ("new_lag", "w'", "P'", "err", "flag")
+        for g, r, name in zip(got[:4], want[:4], names):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=1e-12, atol=1e-12,
+                                       err_msg=name)
+        np.testing.assert_array_equal(np.asarray(got[4]),
+                                      np.asarray(want[4]), err_msg="flag")
+
+    def test_lag_update_matches_step_batch_arrays(self):
+        # The kernel's lag arithmetic must be the simulator's, op for op —
+        # the fused engine takes its carry from the tick while the metrics
+        # come from step_batch_arrays, so any drift would desync them.
+        # 1e-12, not bit-for-bit: these are two separately compiled
+        # dispatches, and XLA contracts multiply-adds into FMAs
+        # differently per module (inside the engine's single compiled scan
+        # the two expressions do agree exactly).
+        from jax.experimental import enable_x64
+
+        from repro.dsp import ClusterModel
+        from repro.dsp.simulator import step_batch_arrays
+        n = 16
+        with enable_x64():
+            ops = self._operands(n, seed=1)
+            rows = jnp.ones(n)
+            new_lag, _ = step_batch_arrays(
+                ClusterModel(), ops["lag"], ops["lag_add"], ops["rates"],
+                rows * 4.0, rows, rows * 4096.0, rows, ops["cap"],
+                ops["down_pre"], ops["down_pre"],
+                jnp.zeros(n), jnp.zeros(n), 5.0)
+            tick_lag = fused_tick(**ops, lam=0.995, thresh=3.0, dt=5.0,
+                                  interpret=True)[0]
+        np.testing.assert_allclose(np.asarray(tick_lag),
+                                   np.asarray(new_lag),
+                                   rtol=1e-12, atol=1e-12)
 
 
 class TestFusedRMSNorm:

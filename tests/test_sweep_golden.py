@@ -7,9 +7,12 @@ counts. Engine refactors must reproduce it:
 
 * ``scalar`` and ``batched`` **bit-for-bit** (float repr round-trips
   exactly through JSON);
-* ``sharded`` at 1e-12 relative (the XLA:CPU FMA-contraction caveat, see
-  docs/SCALING.md), asserted by the ``golden`` case of
-  ``tests/helpers/sharded_diff.py`` under 2 virtual devices.
+* ``sharded`` and ``fused`` at 1e-12 relative (the XLA:CPU FMA-contraction
+  caveat, see docs/SCALING.md — both engines run the float64 step through
+  XLA, which contracts multiply-adds; observed agreement is ~1e-15),
+  asserted in-process for ``fused`` below and for both engines by the
+  ``golden`` case of ``tests/helpers/sharded_diff.py`` under 2 virtual
+  devices.
 
 Regenerate after an *intentional* semantics change::
 
@@ -21,7 +24,7 @@ from pathlib import Path
 from repro.core import EngineConfig
 from repro.dsp import run_sweep
 
-from helpers.sharded_diff import GOLDEN_PATH, VOLATILE, _specs
+from helpers.sharded_diff import GOLDEN_PATH, VOLATILE, _approx, _specs
 
 DIFF_SCRIPT = Path(__file__).parent / "helpers" / "sharded_diff.py"
 
@@ -47,7 +50,16 @@ class TestGoldenSweep:
         res = run_sweep(_specs("golden"), config=EngineConfig())
         assert _digest(res) == json.loads(GOLDEN_PATH.read_text())
 
-    def test_sharded_engine_reproduces_golden(self, run_under_devices):
+    def test_fused_engine_reproduces_golden(self):
+        # In-process, on whatever mesh this process has (1 device is fine —
+        # interval fusion needs no mesh). 1e-12 relative, not bit-for-bit:
+        # XLA:CPU contracts the float64 multiply-adds into FMAs.
+        res = run_sweep(_specs("golden"),
+                        config=EngineConfig(sim_backend="fused"))
+        _approx(_digest(res), json.loads(GOLDEN_PATH.read_text()), 1e-12)
+
+    def test_sharded_and_fused_engines_reproduce_golden(
+            self, run_under_devices):
         out = run_under_devices(2, DIFF_SCRIPT,
                                 "--case", "golden", "--devices", 2)
         assert "DIFF-OK case=golden devices=2" in out
