@@ -152,7 +152,19 @@ def sweep_main(args: argparse.Namespace) -> None:
     config = EngineConfig(sim_backend=args.engine, devices=args.devices,
                           fit_backend=args.fit_backend,
                           forecast_backend=args.forecast_backend)
-    batched = run_sweep(specs, config=config)
+    from repro import obs
+    if args.trace_out:
+        obs.enable(clear=True)
+    try:
+        batched = run_sweep(specs, config=config)
+    finally:
+        if args.trace_out:
+            obs.disable()
+    if args.trace_out:
+        os.makedirs(os.path.dirname(args.trace_out) or ".", exist_ok=True)
+        obs.write_chrome_trace(args.trace_out)
+        print(f"# wrote Chrome trace (load in https://ui.perfetto.dev) "
+              f"to {args.trace_out}")
     print(f"# {batched.engine} engine: {batched.wall_s:.2f}s wall "
           f"({batched.n_steps} steps x {len(specs)} scenarios)")
     if batched.n_model_fits:
@@ -180,8 +192,35 @@ def sweep_main(args: argparse.Namespace) -> None:
                             sc.name.replace("/", "_") + ".json")
         with open(path, "w") as f:
             json.dump(sc.summary(), f, indent=2)
-    with open(os.path.join(args.out, "sweep.json"), "w") as f:
-        json.dump(batched.to_json(), f, indent=2)
+    # sweep.json goes through the exporter schema: engine/devices/seed
+    # live in the leg payload (never the filename), walls + compile split
+    # ride along as the bench section's metrics.
+    devices = args.devices
+    if devices is None:
+        if args.engine in ("sharded", "fused"):
+            import jax
+            devices = jax.device_count()
+        else:
+            devices = 1
+    sweep_metrics = {k: v for k, v in batched.to_json().items()
+                     if k != "scenarios"}
+    leg = obs.make_leg(
+        engine=batched.engine, devices=devices, seed=args.seeds[0],
+        mode="sweep", scenarios=len(specs), n_steps=batched.n_steps,
+        wall_s=batched.wall_s,
+        scenario_steps_per_s=(len(specs) * batched.n_steps
+                              / max(batched.wall_s, 1e-12)))
+    sweep_params = {"traces": args.traces, "controllers": args.controllers,
+                    "seeds": args.seeds, "duration_h": args.duration_h,
+                    "dt": args.dt,
+                    "failure_interval_m": args.failure_interval_m,
+                    "forecasters": args.forecasters}
+    obs.merge_bench(os.path.join(args.out, "sweep.json"), "dsp_sweep",
+                    [leg], params=sweep_params, metrics=sweep_metrics)
+    if args.bench:
+        obs.merge_bench(args.bench, "dsp_sweep", [leg],
+                        params=sweep_params, metrics=sweep_metrics)
+        print(f"# merged dsp_sweep leg into {args.bench}")
     print(f"# wrote {len(batched.scenarios)} scenario JSONs to {args.out}")
 
     hdr = f"{'scenario':32s} {'p50':>7s} {'p95':>7s} {'<2s':>6s} " \
@@ -219,6 +258,13 @@ def main() -> None:
     sw.add_argument("--dt", type=float, default=5.0)
     sw.add_argument("--failure-interval-m", type=float, default=45.0)
     sw.add_argument("--out", default=SWEEP_DIR)
+    sw.add_argument("--trace-out", default=None,
+                    help="enable obs instrumentation for the sweep and "
+                         "write a Chrome-trace JSON here (loadable in "
+                         "Perfetto / chrome://tracing)")
+    sw.add_argument("--bench", default=None,
+                    help="also merge the sweep leg into this bench "
+                         "trajectory file (e.g. BENCH_sweep.json)")
     sw.add_argument("--compare-scalar", action="store_true",
                     help="also run the scalar reference oracle; verify "
                          "equivalence and report the wall-clock speedup")

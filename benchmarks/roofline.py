@@ -11,11 +11,13 @@ cost_analysis of the SPMD-partitioned module reports per-device numbers
     memory_s     = bytes_accessed / 819e9
     collective_s = collective_bytes / 50e9
 
-A second section reads the sweep-engine legs from
-``results/sweep_scaling.json`` (written by ``benchmarks/sweep_scaling.py
---mode fused``) and derives the *dispatch roofline* for the sweep hot
-path: the batched engine pays one host->XLA dispatch per simulator tick,
-the fused engine pays one per decision interval, so
+A second section reads the sweep-engine legs from the schema-versioned
+bench trajectory (``BENCH_sweep.json``, written by
+``benchmarks/sweep_scaling.py --mode fused``) and derives the *dispatch
+roofline* for the sweep hot path — writing the derived per-tick numbers
+back into the same file under a ``roofline_dispatch`` section: the
+batched engine pays one host->XLA dispatch per simulator tick, the fused
+engine pays one per decision interval, so
 
     t_batched_tick = t_step + t_dispatch
     t_fused_tick   = t_step + t_dispatch / K        (K ticks per interval)
@@ -136,10 +138,18 @@ def table(cells: Dict[str, RooflineCell]) -> str:
     return "\n".join(rows)
 
 
-def sweep_dispatch_table(path: str = "results/sweep_scaling.json") -> str:
-    """Fused-vs-batched dispatch roofline from measured sweep legs."""
-    with open(path) as f:
-        legs = json.load(f).get("fused", [])
+def sweep_dispatch_table(path: str = "BENCH_sweep.json") -> str:
+    """Fused-vs-batched dispatch roofline from measured sweep legs.
+
+    Reads the ``mode="fused"`` legs of the ``sweep_scaling`` bench in the
+    schema-versioned trajectory file and merges the derived per-tick /
+    dispatch-bound numbers back into the same file under a
+    ``roofline_dispatch`` section (identity stays in the leg payload).
+    """
+    from repro.obs import load_bench, make_leg, merge_bench
+    legs = load_bench(path)["benches"] \
+        .get("sweep_scaling", {}).get("legs", [])
+    legs = [r for r in legs if r.get("mode") == "fused"]
     base = next((r for r in legs
                  if r["engine"] == "batched" and r["devices"] == 1), None)
     if base is None or not any(r["engine"] == "fused" for r in legs):
@@ -149,6 +159,7 @@ def sweep_dispatch_table(path: str = "results/sweep_scaling.json") -> str:
     rows = ["== sweep dispatch roofline (fused vs batched) ==",
             f"{'engine':>8s} {'devices':>8s} {'tick_us':>9s} "
             f"{'scen-steps/s':>13s} {'vs-batched':>11s} {'t_disp_us':>10s}"]
+    derived = []
     for r in legs:
         t_tick = r["sweep_wall_s"] / r["n_steps"]
         ratio = r["scenario_steps_per_s"] / base["scenario_steps_per_s"]
@@ -161,19 +172,34 @@ def sweep_dispatch_table(path: str = "results/sweep_scaling.json") -> str:
                     f"{1e6 * t_tick:9.1f} "
                     f"{r['scenario_steps_per_s']:13.0f} {ratio:11.2f}x "
                     f"{1e6 * t_disp:10.1f}")
+        derived.append(make_leg(
+            engine=r["engine"], devices=r["devices"],
+            seed=r.get("seed", 0), mode="dispatch",
+            scenarios=r.get("scenarios"), tick_s=t_tick,
+            vs_batched=ratio,
+            dispatch_bound_s=None if r["engine"] != "fused" else t_disp))
+    merge_bench(path, "roofline_dispatch", derived,
+                params={"source": "sweep_scaling[mode=fused]"})
     return "\n".join(rows)
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="BENCH_sweep.json",
+                    help="bench trajectory file holding the fused-vs-"
+                         "batched sweep legs (roofline_dispatch is merged "
+                         "back into it)")
+    args = ap.parse_args()
     if not os.path.exists("results/roofline_raw.json"):
         print("roofline_raw.json missing — run "
               "`python -m repro.launch.dryrun --mesh single --unroll "
               "--out results/roofline_raw.json` first")
     else:
         print(table(load_cells()))
-    if os.path.exists("results/sweep_scaling.json"):
+    if os.path.exists(args.bench):
         print()
-        print(sweep_dispatch_table())
+        print(sweep_dispatch_table(args.bench))
 
 
 if __name__ == "__main__":

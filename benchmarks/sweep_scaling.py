@@ -21,8 +21,11 @@ In the scaling modes one device runs the single-device ``batched`` engine
 ``sim_backend="sharded"`` refuses a 1-wide mesh by design); every other
 count runs ``sharded``. ``--engine`` overrides the choice (the fused mode
 uses it). Controllers are baselines only, so the measurement isolates the
-simulation hot path from GP-fit cost. Results go to ``--json`` (uploaded
-as a CI artifact) and a printed table::
+simulation hot path from GP-fit cost. Results merge into the
+schema-versioned bench trajectory at ``--bench`` (default
+``BENCH_sweep.json`` at the repo root — the file CI diffs with
+``scripts/obs_report.py --diff``; leg identity lives in the payload, not
+the filename) plus a printed table::
 
     PYTHONPATH=src python benchmarks/sweep_scaling.py \
         --device-counts 1,2,4 --scenarios 16 --duration-h 0.5
@@ -106,7 +109,8 @@ def child_main(args: argparse.Namespace) -> None:
     res = run_sweep(grid, config=config)
     wall = time.perf_counter() - t0
     record = {
-        "devices": n, "engine": engine, "scenarios": len(grid),
+        "devices": n, "engine": engine, "seed": 0,
+        "scenarios": len(grid),
         "n_steps": res.n_steps, "wall_s": wall,
         "sweep_wall_s": res.wall_s,
         "scenario_steps_per_s": len(grid) * res.n_steps / res.wall_s,
@@ -176,8 +180,10 @@ def main() -> None:
                                        "all"),
                     default="both",
                     help="'both' = strong+weak; 'all' adds fused-vs-batched")
-    ap.add_argument("--json", default="results/sweep_scaling.json",
-                    help="output path for the aggregate JSON report")
+    ap.add_argument("--bench", default="BENCH_sweep.json",
+                    help="bench trajectory file to merge results into "
+                         "(schema-versioned; leg identity is in the "
+                         "payload, not the filename)")
     ap.add_argument("--engine",
                     choices=("auto", "batched", "sharded", "fused"),
                     default="auto",
@@ -218,14 +224,23 @@ def main() -> None:
         report["fused"] = legs = [r for r in results if r is not None]
         print_fused_table(legs)
 
-    os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-    payload = {"params": {"device_counts": counts,
-                          "scenarios": args.scenarios,
-                          "duration_h": args.duration_h, "dt": args.dt},
-               **report}
-    with open(args.json, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"\n# wrote {args.json}")
+    # device_env() already put src/ on sys.path; repro.obs imports no jax,
+    # so the parent process never initializes a backend.
+    from repro.obs import make_leg, merge_bench
+    legs = [make_leg(engine=r["engine"], devices=r["devices"],
+                     seed=r.get("seed", 0), mode=mode,
+                     scenarios=r["scenarios"], n_steps=r["n_steps"],
+                     wall_s=r["wall_s"], sweep_wall_s=r["sweep_wall_s"],
+                     scenario_steps_per_s=r["scenario_steps_per_s"])
+            for mode, recs in report.items() for r in recs]
+    d = os.path.dirname(args.bench)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    merge_bench(args.bench, "sweep_scaling", legs,
+                params={"device_counts": counts,
+                        "scenarios": args.scenarios,
+                        "duration_h": args.duration_h, "dt": args.dt})
+    print(f"\n# merged {len(legs)} leg(s) into {args.bench}")
     if failed:
         # A green exit with empty tables would mask an engine regression
         # (this runs as a CI step); surviving legs are still reported above.

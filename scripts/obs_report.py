@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Summarize an obs Chrome trace, or diff two bench trajectory files.
+
+Two modes (see docs/OBSERVABILITY.md):
+
+* ``obs_report.py TRACE.json`` — summarize a Chrome-trace file written by
+  ``repro.obs.write_chrome_trace``: top spans by total wall, the
+  warmup-vs-steady split (every span name's *first* occurrence is the
+  warmup sample — on a cold process it carries the trace+compile wall —
+  the rest are steady state), and the recompile / transfer counters the
+  exporter embeds under ``otherData.metrics``.
+
+* ``obs_report.py --diff OLD NEW [--rel-tol 0.2]`` — compare two
+  schema-versioned bench files (``BENCH_sweep.json``) leg by leg on
+  ``scenario_steps_per_s`` and **exit nonzero when any leg regressed**
+  by more than the tolerance. The default 20% is deliberately loose:
+  single CI runs on shared runners are noisy — tighten it only against
+  medians of repeated runs.
+
+Both modes are stdlib + repro.obs only (no jax import, safe anywhere).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs import TRACE_SCHEMA, diff_bench, format_diff, load_bench  # noqa: E402
+
+
+def summarize_trace(path: str, top: int = 15) -> List[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    other = doc.get("otherData", {})
+    schema = other.get("schema")
+    if schema != TRACE_SCHEMA:
+        raise SystemExit(f"{path}: unsupported trace schema {schema!r} "
+                         f"(expected {TRACE_SCHEMA!r})")
+    events = doc.get("traceEvents", [])
+    lines = [f"# {path}: {len(events)} spans "
+             f"({other.get('dropped_spans', 0)} dropped)"]
+
+    by_name: Dict[str, List[float]] = defaultdict(list)
+    for ev in events:                      # events are in completion order
+        by_name[ev["name"]].append(float(ev.get("dur", 0.0)))  # micros
+
+    lines.append(f"\n{'span':32s} {'count':>7s} {'total_ms':>10s} "
+                 f"{'mean_us':>10s} {'warmup_us':>10s} {'steady_us':>10s}")
+    ranked = sorted(by_name.items(), key=lambda kv: -sum(kv[1]))
+    for name, durs in ranked[:top]:
+        total, n = sum(durs), len(durs)
+        warmup = durs[0]
+        steady = (total - warmup) / (n - 1) if n > 1 else float("nan")
+        lines.append(f"{name:32s} {n:7d} {total/1e3:10.2f} "
+                     f"{total/n:10.1f} {warmup:10.1f} {steady:10.1f}")
+    if len(ranked) > top:
+        lines.append(f"... {len(ranked) - top} more span name(s) omitted "
+                     f"(--top to raise)")
+
+    metrics = other.get("metrics", {})
+    counters: Dict[str, Any] = metrics.get("counters", {})
+    recompiles = {k: v for k, v in counters.items()
+                  if k.startswith("recompiles.")}
+    if recompiles:
+        lines.append("\n# recompiles (jit-cache growth per dispatch site)")
+        for k in sorted(recompiles):
+            lines.append(f"  {k}: {recompiles[k]}")
+    interesting = ("sweep.", "transfer.", "phase.")
+    rest = {k: v for k, v in counters.items()
+            if k.startswith(interesting)}
+    if rest:
+        lines.append("\n# counters")
+        for k in sorted(rest):
+            v = rest[k]
+            lines.append(f"  {k}: {v:.4f}" if isinstance(v, float)
+                         else f"  {k}: {v}")
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", nargs="?",
+                    help="Chrome-trace JSON to summarize")
+    ap.add_argument("--top", type=int, default=15,
+                    help="span names to show in the summary table")
+    ap.add_argument("--diff", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two bench trajectory files; exits 1 on "
+                         "any throughput regression beyond --rel-tol")
+    ap.add_argument("--rel-tol", type=float, default=0.20,
+                    help="relative throughput drop tolerated before a "
+                         "leg counts as a regression (default 0.20)")
+    args = ap.parse_args()
+
+    if args.diff:
+        old, new = (load_bench(p) for p in args.diff)
+        rows, n_regressions = diff_bench(old, new, rel_tol=args.rel_tol)
+        print("\n".join(format_diff(rows, args.rel_tol)))
+        if n_regressions:
+            print(f"\n{n_regressions} leg(s) REGRESSED beyond "
+                  f"{args.rel_tol:.0%}")
+            return 1
+        return 0
+    if not args.trace:
+        ap.error("give a trace file to summarize, or --diff OLD NEW")
+    print("\n".join(summarize_trace(args.trace, args.top)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

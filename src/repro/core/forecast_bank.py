@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from .. import obs
 from .anomaly import DETECTOR_ERR_WINDOW
 from .forecast import (ERR_WINDOW, FORECASTER_DEFAULTS, FORECASTER_KINDS,
                        P_TRACE_CAP, ROLLOUT_DIFF_CAP, make_scalar_forecaster)
@@ -412,6 +413,20 @@ _snaive_chunk_roll_jit = partial(
     jax.jit, static_argnames=("steps",), donate_argnums=(0,))(_snaive_chunk_roll)
 
 
+def jit_cache_size() -> int:
+    """Combined dispatch-cache size of every family's jitted entry point.
+
+    Growth between two samples means a flush/rollout dispatch paid a fresh
+    trace+compile — :class:`ForecastBank` uses it to book that wall into
+    ``compile_wall_s`` instead of the steady-state counters (same
+    ``_cache_size()`` signal as ``analysis.contracts.count_traces``).
+    """
+    return sum(int(f._cache_size()) for f in (
+        _arima_chunk_jit, _arima_roll_jit, _arima_chunk_roll_jit,
+        _holt_chunk_jit, _holt_roll_jit, _holt_chunk_roll_jit,
+        _snaive_chunk_jit, _snaive_roll_jit, _snaive_chunk_roll_jit))
+
+
 # ---------------------------------------------------------------------------
 # family banks: padded state + staging + one masked dispatch per flush
 # ---------------------------------------------------------------------------
@@ -745,10 +760,22 @@ class ForecastBank:
                 [kw for _, kw in members], use_pallas=use_pallas,
                 devices=devices)
         self._cache: Dict[str, np.ndarray] = {}
-        #: wall-clock spent in batched update / rollout dispatches
+        #: wall-clock spent in batched update / rollout dispatches; walls
+        #: of dispatches that paid a fresh trace+compile land in
+        #: ``compile_wall_s`` instead (first-dispatch split)
         self.update_wall_s = 0.0
         self.rollout_wall_s = 0.0
+        self.compile_wall_s = 0.0
         self.n_updates = 0
+
+    def _book_wall(self, attr: str, t0: float, cache0: int) -> None:
+        """Accumulate a dispatch wall into ``attr``, or into
+        ``compile_wall_s`` when the dispatch grew the jit cache."""
+        wall = time.perf_counter() - t0
+        if jit_cache_size() > cache0:
+            self.compile_wall_s += wall
+        else:
+            setattr(self, attr, getattr(self, attr) + wall)
 
     @classmethod
     def from_kinds(cls, kinds: Sequence[str], *,
@@ -780,12 +807,19 @@ class ForecastBank:
         if not any(f.has_staged for f in self._fams.values()):
             return 0
         t0 = time.perf_counter()
+        cache0 = jit_cache_size()
         n = 0
-        for kind, fam in self._fams.items():
-            if fam.has_staged:
-                n += fam.flush()
-                self._drop_family_cache(kind)
-        self.update_wall_s += time.perf_counter() - t0
+        with obs.timed_phase("forecast", "forecast.flush",
+                             streams=self.n_streams):
+            for kind, fam in self._fams.items():
+                if fam.has_staged:
+                    n += fam.flush()
+                    self._drop_family_cache(kind)
+        self._book_wall("update_wall_s", t0, cache0)
+        if obs.enabled():
+            obs.inc("sweep.forecast_flushes")
+            obs.inc("sweep.forecast_updates", n)
+            obs.track_jit_cache("forecast_bank", jit_cache_size())
         self.n_updates += n
         return n
 
@@ -801,8 +835,14 @@ class ForecastBank:
         f = self._fams[fam]
         if f.has_staged:
             t0 = time.perf_counter()
-            n, out = f.flush_and_roll(self.horizon)
-            self.update_wall_s += time.perf_counter() - t0
+            cache0 = jit_cache_size()
+            with obs.timed_phase("forecast", "forecast.flush_and_roll",
+                                 family=fam):
+                n, out = f.flush_and_roll(self.horizon)
+            self._book_wall("update_wall_s", t0, cache0)
+            if obs.enabled():
+                obs.inc("sweep.forecast_updates", n)
+                obs.track_jit_cache("forecast_bank", jit_cache_size())
             self.n_updates += n
             self._drop_family_cache(fam)
             self._cache[fam] = out
@@ -810,8 +850,10 @@ class ForecastBank:
         cached = self._cache.get(fam)
         if cached is None:
             t0 = time.perf_counter()
-            cached = f.rollout(self.horizon)
-            self.rollout_wall_s += time.perf_counter() - t0
+            cache0 = jit_cache_size()
+            with obs.timed_phase("forecast", "forecast.rollout", family=fam):
+                cached = f.rollout(self.horizon)
+            self._book_wall("rollout_wall_s", t0, cache0)
             self._cache[fam] = cached
         return cached
 
@@ -821,8 +863,11 @@ class ForecastBank:
             return self._cached_rollout(fam)[i, :steps].copy()
         self.flush()
         t0 = time.perf_counter()
-        out = self._fams[fam].rollout(steps)[i]
-        self.rollout_wall_s += time.perf_counter() - t0
+        cache0 = jit_cache_size()
+        with obs.timed_phase("forecast", "forecast.rollout", family=fam,
+                             steps=steps):
+            out = self._fams[fam].rollout(steps)[i]
+        self._book_wall("rollout_wall_s", t0, cache0)
         return out
 
     def binned_row(self, row: int, horizon: int, bins: int) -> float:
@@ -1039,7 +1084,8 @@ class DetectorBank:
         vals = np.zeros(self.b)
         vals[:self.n] = values
         t0 = time.perf_counter()
-        with enable_x64():
+        with obs.timed_phase("detect", "detector.observe", streams=self.n), \
+                enable_x64():
             self._state, self._ring, self._rn, flags = _detector_observe(
                 self._state, self._params, self._ring, self._rn,
                 jnp.asarray(vals), jnp.asarray(act),
@@ -1047,4 +1093,8 @@ class DetectorBank:
         out = np.asarray(flags)[:self.n]
         self.wall_s += time.perf_counter() - t0
         self.n_samples += 1
+        if obs.enabled():
+            obs.inc("sweep.detector_samples")
+            obs.track_jit_cache("detector",
+                                int(_detector_observe._cache_size()))
         return out

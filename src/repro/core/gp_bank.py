@@ -32,6 +32,7 @@ import numpy as np
 import optax
 import optax.tree_utils as otu
 
+from .. import obs
 from .gp import _JITTER, GP, _matern52, _unpack, restart_inits
 
 #: Default optimizer budget; mirrors ModelBank's scalar-path settings.
@@ -185,6 +186,17 @@ def _posterior_packed(x: jnp.ndarray, mask: jnp.ndarray, theta: jnp.ndarray,
     return jax.vmap(one)(x, mask, theta, chol, alpha)
 
 
+def jit_cache_size() -> int:
+    """Combined dispatch-cache size of the bank's jitted entry points.
+
+    Growth between two samples means a fresh trace+compile happened in
+    between — callers (ModelBank, the sweep engine) use it to split
+    compile wall out of steady-state fit wall, the same ``_cache_size()``
+    signal ``analysis.contracts.count_traces`` measures.
+    """
+    return int(_fit_packed._cache_size()) + int(_posterior_packed._cache_size())
+
+
 @dataclass
 class GPBank:
     """A batch of fitted exact GPs sharing one packed representation.
@@ -259,8 +271,15 @@ class GPBank:
             t0s[i] = restart_inits(dim, restarts, seeds[i])
 
         pack = put if put is not None else jnp.asarray
-        theta, _val, chol, alpha = _fit_packed(
-            pack(xs), pack(ys), pack(mask), pack(t0s), max_iter=max_iter)
+        with obs.timed_phase("fit", "gp_bank.fit",
+                             members=n_real, b=b, n_max=n_max):
+            theta, _val, chol, alpha = _fit_packed(
+                pack(xs), pack(ys), pack(mask), pack(t0s), max_iter=max_iter)
+        if obs.enabled():
+            obs.inc("sweep.gp_fits", n_real)
+            obs.inc("transfer.h2d_bytes",
+                    xs.nbytes + ys.nbytes + mask.nbytes + t0s.nbytes)
+            obs.track_jit_cache("gp_bank", jit_cache_size())
         keep = slice(0, n_real)
         return GPBank(x=xs[keep], mask=mask[keep],
                       theta=np.asarray(theta)[keep],
@@ -280,10 +299,14 @@ class GPBank:
         """All members' posterior mean/variance (original units) at a shared
         (m, d) query grid. Returns two (B, m) arrays in one jitted call."""
         xq = np.asarray(xq, np.float64).reshape(-1, self.x.shape[-1])
-        mean_s, var_s = _posterior_packed(
-            jnp.asarray(self.x), jnp.asarray(self.mask),
-            jnp.asarray(self.theta), jnp.asarray(self.chol),
-            jnp.asarray(self.alpha), jnp.asarray(xq))
+        with obs.span("gp_bank.posterior", members=self.n_members,
+                      m=xq.shape[0]):
+            mean_s, var_s = _posterior_packed(
+                jnp.asarray(self.x), jnp.asarray(self.mask),
+                jnp.asarray(self.theta), jnp.asarray(self.chol),
+                jnp.asarray(self.alpha), jnp.asarray(xq))
+        if obs.enabled():
+            obs.track_jit_cache("gp_bank", jit_cache_size())
         mean = np.asarray(mean_s) * self.y_std[:, None] + self.y_mean[:, None]
         var = np.asarray(var_s) * (self.y_std ** 2)[:, None]
         return mean, var
@@ -337,9 +360,13 @@ def batched_posterior(gps: Sequence[GP], xq: np.ndarray,
         chol[i, n:, :n] = 0.0
         alpha[i, :n] = g.alpha
     pack = put if put is not None else jnp.asarray
-    mean_s, var_s = _posterior_packed(
-        pack(xs), pack(mask), pack(theta), pack(chol), pack(alpha),
-        jnp.asarray(xq))
+    with obs.span("gp_bank.batched_posterior", members=len(gps),
+                  m=xq.shape[0]):
+        mean_s, var_s = _posterior_packed(
+            pack(xs), pack(mask), pack(theta), pack(chol), pack(alpha),
+            jnp.asarray(xq))
+    if obs.enabled():
+        obs.track_jit_cache("gp_bank", jit_cache_size())
     y_std = np.asarray([g.y_std for g in gps])
     y_mean = np.asarray([g.y_mean for g in gps])
     mean = np.asarray(mean_s)[:len(gps)] * y_std[:, None] + y_mean[:, None]

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core.anomaly import RecoveryTracker
 from ..core.executor import ProfileSpec
 from ..core.registry import SIM_ENGINES
@@ -259,7 +260,10 @@ class SweepExecutorBase:
     # -- simulation stepping (driven by the sweep engine) -------------------
     def step(self, rates: np.ndarray) -> Dict[str, np.ndarray]:
         """Advance every scenario one step; record telemetry history."""
-        m = self._step_impl(np.asarray(rates, float), self.dt)
+        with obs.timed_phase("simulate", "engine.step"):
+            m = self._step_impl(np.asarray(rates, float), self.dt)
+        obs.inc("sweep.ticks")
+        obs.inc("sweep.scenario_ticks", len(self.seeds))
         self.step_index += 1
         for k in HIST_KEYS:
             self.hist[k][:, self.step_index] = m[k]
@@ -307,6 +311,7 @@ class SweepExecutorBase:
         applied = self._reconfigure_impl(idx, cfg, restart_s)
         if applied:
             self.reconf_count[idx] += 1
+            obs.inc("sweep.reconfigurations")
         return applied
 
     def observe(self) -> Dict[str, np.ndarray]:
@@ -333,15 +338,17 @@ class SweepExecutorBase:
         # clone seeds of the scalar protocol (seed = s*1009 + k + rate).
         counters: Dict[int, int] = {}
         out: List[Optional[Dict[str, float]]] = []
-        for idx, cfg, rate in specs:
-            k = counters.get(idx, 0)
-            counters[idx] = k + 1
-            cost = self.profile_costs[idx]
-            out.append(profile_one(
-                self.model, self.cmax, JobConfig.from_dict(cfg), rate,
-                self.dt, seed=self.seeds[idx] * 1009 + k + int(rate),
-                account=lambda m, _c=cost: _c.add(m, self.dt),
-                detector_backend=self.detector_backend))
+        obs.inc("sweep.profile_runs", len(specs))
+        with obs.span("engine.profile", runs=len(specs)):
+            for idx, cfg, rate in specs:
+                k = counters.get(idx, 0)
+                counters[idx] = k + 1
+                cost = self.profile_costs[idx]
+                out.append(profile_one(
+                    self.model, self.cmax, JobConfig.from_dict(cfg), rate,
+                    self.dt, seed=self.seeds[idx] * 1009 + k + int(rate),
+                    account=lambda m, _c=cost: _c.add(m, self.dt),
+                    detector_backend=self.detector_backend))
         return out
 
     def allocated_cost(self, idx: int, config: Mapping[str, float]) -> float:
@@ -485,11 +492,15 @@ class ShardedSweepExecutor(SweepExecutorBase):
         if self._dev_cfg is None:
             import jax
             st = self.state
+            arrays = (st.workers, st.cpu_cores, st.memory_mb,
+                      st.task_slots, self._cap_base)
             with _x64():
                 self._dev_cfg = tuple(
-                    jax.device_put(a, self._row_sharding)
-                    for a in (st.workers, st.cpu_cores, st.memory_mb,
-                              st.task_slots, self._cap_base))
+                    jax.device_put(a, self._row_sharding) for a in arrays)
+            if obs.enabled():
+                obs.inc("sweep.device_config_rebuilds")
+                obs.inc("transfer.h2d_bytes",
+                        sum(np.asarray(a).nbytes for a in arrays))
         return self._dev_cfg
 
     def _step_operands(self) -> tuple:
@@ -542,7 +553,7 @@ class ShardedSweepExecutor(SweepExecutorBase):
         z1 = self.rngs.draw()
         z2 = np.abs(self.rngs.draw(~down_post))
 
-        with _x64():
+        with obs.span("engine.sharded.step"), _x64():
             self._lag, m = self._step_fn(
                 self.model, self._lag, self._lag_add, r,
                 *self._device_configs(), down_pre, down_post, z1, z2, dt)
@@ -552,6 +563,15 @@ class ShardedSweepExecutor(SweepExecutorBase):
         st.from_device(self._lag)
         st.last_rate = r
         out = {k: np.asarray(v)[:S] for k, v in m.items()}
+        if obs.enabled():
+            obs.inc("transfer.h2d_bytes",
+                    self._lag_add.nbytes + r.nbytes + down_pre.nbytes
+                    + down_post.nbytes + z1.nbytes + z2.nbytes)
+            obs.inc("transfer.d2h_bytes",
+                    self._lag.nbytes
+                    + sum(v.nbytes for v in out.values()))
+            obs.track_jit_cache("sharded_step",
+                                int(self._step_fn._cache_size()))
         return out
 
     def inject_failure(self, idx: int) -> None:
@@ -658,7 +678,14 @@ SHARDED_STEP_CONTRACT = _sharded_step_contract()
 def _sharded_probe():
     ex = ShardedSweepExecutor(ClusterModel(), [JobConfig(), JobConfig()],
                               seeds=[0, 1], dt=5.0, n_steps=4)
-    return ex.contract_probe()
+    args = ex._step_operands()
+    # Companion probe: tracing the same step with obs instrumentation
+    # forced on must yield the identical primitive count (spans/metrics are
+    # strictly host-side of the jit boundary) and no callbacks.
+    obs_probe = obs.instrumentation_probe(
+        "engine:sharded+obs", step_batch_arrays, args,
+        static_argnums=(0, len(args) - 1), x64=True)
+    return [ex.contract_probe(), obs_probe]
 
 
 def _host_engine_probe(name: str, why: str):

@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.registry import SIM_ENGINES
 from .executor import SweepExecutorBase, _x64
 from .simulator import (BatchedNormals, BatchState, ClusterModel, JobConfig,
@@ -296,7 +297,8 @@ class FusedSweepExecutor(SweepExecutorBase):
                 for j in np.nonzero(inject_ks[k])[0]:
                     self._stage_failure(int(j), stage)
 
-        with _x64():
+        with obs.timed_phase("simulate", "engine.fused.interval",
+                             K=K, Kp=Kp, scenarios=S), _x64():
             plane = self._plane_sharding
             xs = tuple(jax.device_put(a, plane)
                        for a in (R, lag_add, dpre, dpost, z1, z2))
@@ -307,12 +309,25 @@ class FusedSweepExecutor(SweepExecutorBase):
                 dt, self.use_pallas)
         (self._lag, self._det_w, self._det_p, self._det_y,
          self._det_trig) = carry
+        if obs.enabled():
+            obs.inc("sweep.intervals")
+            obs.inc("sweep.ticks", K)
+            obs.inc("sweep.scenario_ticks", K * S)
+            obs.inc("transfer.h2d_bytes",
+                    R.nbytes + lag_add.nbytes + dpre.nbytes + dpost.nbytes
+                    + z1.nbytes + z2.nbytes + valid.nbytes)
+            obs.track_jit_cache("fused_scan",
+                                int(_fused_scan()._cache_size()))
         # Forced copy into the mirror: the device buffer is donated into
         # the next dispatch. Valid-tick masking makes the final carry the
         # lag after the last real tick.
         st.from_device(self._lag)
 
         out = {key: np.asarray(v)[:K, :S] for key, v in ms.items()}
+        if obs.enabled():
+            obs.inc("transfer.d2h_bytes",
+                    sum(v.nbytes for v in out.values())
+                    + self.state.lag_events.nbytes)
         i0 = self.step_index + 1
         for key in self.hist:
             self.hist[key][:, i0:i0 + K] = out[key].T
@@ -506,7 +521,14 @@ def _fused_probe():
               np.zeros(n), DET_LAMBDA, DET_THRESH),
         kwargs={"dt": 5.0, "interpret": True},
         x64=True)
-    return [ex.contract_probe(), kernel_probe]
+    # Companion probe: tracing the interval scan with obs instrumentation
+    # forced on must yield the identical primitive count — the span/counter
+    # layer lives strictly on the host side of the dispatch boundary.
+    args = ex._scan_operands()
+    obs_probe = obs.instrumentation_probe(
+        "engine:fused+obs", fused_interval_scan, args,
+        static_argnums=(0, len(args) - 2, len(args) - 1), x64=True)
+    return [ex.contract_probe(), kernel_probe, obs_probe]
 
 
 SIM_ENGINES.attach_contract("fused", _fused_probe)

@@ -45,10 +45,12 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core.demeter import DemeterHyperParams, ModelBank
 from ..core.executor import EngineConfig, coerce_config, warn_legacy_kwarg
 from ..core.forecast import FORECASTER_KINDS
 from ..core.forecast_bank import ForecastBank, make_forecaster
+from ..core.gp_bank import jit_cache_size as _gp_jit_cache_size
 from ..core.registry import CONTROLLERS, FORECASTERS, SIM_ENGINES
 from . import policies as _policies  # noqa: F401  (registers the built-ins)
 from .executor import HIST_KEYS, SweepExecutorBase
@@ -199,6 +201,11 @@ class SweepResult:
     #: flush/rollout dispatches) and how many stream-updates were applied
     forecast_update_wall_s: float = 0.0
     n_forecast_updates: int = 0
+    #: first-dispatch trace+compile wall split out of the two update walls
+    #: above (a dispatch whose jit cache grew books its wall here, so the
+    #: steady-state numbers are comparable across warm and cold processes)
+    model_update_compile_wall_s: float = 0.0
+    forecast_update_compile_wall_s: float = 0.0
 
     def by_name(self) -> Dict[str, ScenarioResult]:
         return {s.name: s for s in self.scenarios}
@@ -210,6 +217,10 @@ class SweepResult:
                 "n_model_fits": self.n_model_fits,
                 "forecast_update_wall_s": self.forecast_update_wall_s,
                 "n_forecast_updates": self.n_forecast_updates,
+                "model_update_compile_wall_s":
+                    self.model_update_compile_wall_s,
+                "forecast_update_compile_wall_s":
+                    self.forecast_update_compile_wall_s,
                 "scenarios": [s.summary() for s in self.scenarios]}
 
 
@@ -352,6 +363,7 @@ class SweepEngine:
                     for j, (cls, spec)
                     in enumerate(zip(policy_classes, self.specs))]
         model_update_wall = 0.0
+        model_compile_wall = 0.0
         n_model_fits = 0
         forecast_wall = 0.0
         n_forecast_updates = 0
@@ -415,13 +427,16 @@ class SweepEngine:
 
         def policy_block(t: float, i: int, active) -> None:
             """Controller decisions (event-scheduled, never per-step)."""
-            nonlocal model_update_wall, n_model_fits, n_forecast_updates
+            nonlocal model_update_wall, model_compile_wall, n_model_fits, \
+                n_forecast_updates
             pol_due = t >= policy_next
             if active is not None:
                 pol_due &= active
             if not pol_due.any():
                 return
             due = np.nonzero(pol_due)[0]
+            if obs.enabled():
+                obs.inc("sweep.policy_triggers", len(due))
             # One shared batched forecast update for every policy that
             # staged telemetry: each due scenario's observation lands in
             # the shared ForecastBank, which replays all queued ticks of
@@ -432,9 +447,9 @@ class SweepEngine:
                         policies[j].pending_ingest(self, j, t, i))
                        for j in due
                        if hasattr(policies[j], "pending_ingest")]
-            for pol, obs in due_obs:
-                if obs is not None:
-                    pol.ingest(obs)
+            for pol, ob in due_obs:
+                if ob is not None:
+                    pol.ingest(ob)
                     n_forecast_updates += 1
             # One shared batched model-update for every controller due
             # this tick: all stale (segment, metric) GPs across the
@@ -444,11 +459,20 @@ class SweepEngine:
                      if (b := getattr(policies[j], "bank", None))
                      is not None]
             if banks:
+                # Compile-wall split: a refresh whose dispatch grew the GP
+                # fitter's jit cache spent its wall tracing+compiling, not
+                # fitting — book it separately so steady-state numbers stay
+                # comparable across warm and cold processes.
+                cache0 = _gp_jit_cache_size()
                 n_fit, fit_wall = ModelBank.batch_refresh(banks)
-                model_update_wall += fit_wall
+                if _gp_jit_cache_size() > cache0:
+                    model_compile_wall += fit_wall
+                else:
+                    model_update_wall += fit_wall
                 n_model_fits += n_fit
-            for j in due:
-                policy_next[j] = policies[j].act(self, j, t, i)
+            with obs.span("sweep.policy_block", t=float(t), due=len(due)):
+                for j in due:
+                    policy_next[j] = policies[j].act(self, j, t, i)
 
         def drive_ticks() -> None:
             """Classic driver: one executor dispatch per simulator tick."""
@@ -541,16 +565,19 @@ class SweepEngine:
                 i = i_evt + 1
 
         t0 = time.perf_counter()
-        if getattr(ex, "supports_intervals", False):
-            drive_intervals()
-        else:
-            drive_ticks()
+        with obs.span("sweep.run", engine=config.sim_backend, scenarios=S,
+                      steps=int(self.n_steps)):
+            if getattr(ex, "supports_intervals", False):
+                drive_intervals()
+            else:
+                drive_ticks()
         wall = time.perf_counter() - t0
         # Fold in lazy fits (segments first hit mid-act, cold starts).
         for p in policies:
             bank = getattr(p, "bank", None)
             if bank is not None:
                 model_update_wall += bank.fit_wall_s
+                model_compile_wall += bank.compile_wall_s
                 n_model_fits += bank.n_fits
         # TSF wall: every policy accumulates its own forecaster wall
         # (updates, flushes triggered by reads, rollouts) — see
@@ -562,6 +589,13 @@ class SweepEngine:
             forecast_bank.flush()
             forecast_wall += time.perf_counter() - t0_f
         forecast_wall += sum(getattr(p, "tsf_wall_s", 0.0) for p in policies)
+        # The bank classifies each of its dispatch walls as compile or
+        # steady at dispatch time (jit-cache growth); those dispatches are
+        # nested inside the controller timers summed above, so the
+        # steady-state wall is the total minus the compile share.
+        forecast_compile_wall = (forecast_bank.compile_wall_s
+                                 if forecast_bank is not None else 0.0)
+        forecast_wall = max(forecast_wall - forecast_compile_wall, 0.0)
 
         results = []
         for j, spec in enumerate(self.specs):
@@ -588,7 +622,10 @@ class SweepEngine:
                            model_update_wall_s=model_update_wall,
                            n_model_fits=n_model_fits,
                            forecast_update_wall_s=forecast_wall,
-                           n_forecast_updates=n_forecast_updates)
+                           n_forecast_updates=n_forecast_updates,
+                           model_update_compile_wall_s=model_compile_wall,
+                           forecast_update_compile_wall_s=(
+                               forecast_compile_wall))
 
 
 def run_sweep(specs: Sequence[ScenarioSpec], *,

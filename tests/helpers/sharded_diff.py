@@ -42,7 +42,8 @@ GOLDEN_PATH = REPO / "tests" / "golden" / "sweep_small.json"
 
 #: volatile SweepResult keys (timers + the engine label itself)
 VOLATILE = ("engine", "wall_s", "model_update_wall_s",
-            "forecast_update_wall_s")
+            "forecast_update_wall_s", "model_update_compile_wall_s",
+            "forecast_update_compile_wall_s")
 
 #: substrings whose presence in the compiled step would mean the scenario
 #: axis stopped partitioning cleanly
@@ -156,6 +157,18 @@ def run_case(case: str, devices: int) -> None:
         assert b.name == c.name
         assert b.allclose(c), f"{b.name}: batched != scalar"
     assert _strip(batched.to_json()) == _strip(scalar.to_json())
+
+    # observability must never perturb results: an obs-enabled run yields
+    # the bit-identical digest (timers stripped), with spans recorded
+    from repro import obs
+    obs.enable(clear=True)
+    try:
+        obs_run = run_sweep(specs)
+    finally:
+        obs.disable()
+    assert _strip(obs_run.to_json()) == _strip(batched.to_json()), \
+        "obs instrumentation perturbed sweep results"
+    assert obs.tracer().events, "obs-enabled run recorded no spans"
 
     # fused engine: runs at every device count, including 1
     feng = SweepEngine(specs, config=EngineConfig(sim_backend="fused",

@@ -238,7 +238,9 @@ class TestLegacyKwargShims:
         new = run_sweep(grid, config=EngineConfig())
         a, b = legacy.to_json(), new.to_json()
         for volatile in ("wall_s", "model_update_wall_s",
-                         "forecast_update_wall_s"):
+                         "forecast_update_wall_s",
+                         "model_update_compile_wall_s",
+                         "forecast_update_compile_wall_s"):
             a.pop(volatile), b.pop(volatile)
         assert a == b
 
