@@ -1,0 +1,94 @@
+"""Fleet-controller throughput benchmark: decisions and ingest vs fleet size.
+
+Runs the deterministic loadgen soak (:func:`repro.fleet.loadgen.run_soak`)
+at a ladder of fleet sizes (default ``16,256,1024`` concurrent jobs) and
+reports, per size:
+
+* **decisions/s** — Demeter decisions (warm optimizations + cold-baseline
+  reverts) sustained by the service loop;
+* **ingest samples/s** — telemetry samples accepted through the
+  out-of-order batched ingestion path;
+* **scenario-steps/s** — vectorized simulator throughput feeding the fleet
+  (the trajectory's common throughput field).
+
+Because the per-epoch bank updates are each ONE batched dispatch, the
+samples/s column should grow roughly linearly with fleet size while the
+per-epoch dispatch count stays flat — that is the scaling claim this
+benchmark tracks over time. Results merge into the schema-versioned bench
+trajectory (``BENCH_sweep.json`` at the repo root; CI diffs it with
+``scripts/obs_report.py --diff``) under the ``fleet_bench`` section::
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py --sizes 16,256,1024
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def run_size(n_jobs: int, epochs: int, seed: int) -> dict:
+    from repro.fleet.loadgen import SoakConfig, run_soak
+    r = run_soak(SoakConfig(n_jobs=n_jobs, epochs=epochs, seed=seed))
+    return {
+        "jobs": n_jobs, "epochs": epochs, "seed": seed,
+        "wall_s": r["wall_s"],
+        "decisions": r["decisions"],
+        "decisions_per_s": r["decisions_per_s"],
+        "ingest_samples_per_s": r["ingest_samples_per_s"],
+        "scenario_steps_per_s": r["scenario_steps_per_s"],
+        "warm": r["stats"]["warm"],
+        "digest": r["decision_digest"][:16],
+    }
+
+
+def print_table(rows: List[dict]) -> None:
+    print(f"\n{'jobs':>6s} {'epochs':>7s} {'wall_s':>8s} "
+          f"{'decisions':>10s} {'dec/s':>8s} {'samples/s':>10s} "
+          f"{'scen-steps/s':>13s} {'warm':>6s}")
+    for r in rows:
+        print(f"{r['jobs']:6d} {r['epochs']:7d} {r['wall_s']:8.2f} "
+              f"{r['decisions']:10d} {r['decisions_per_s']:8.1f} "
+              f"{r['ingest_samples_per_s']:10.0f} "
+              f"{r['scenario_steps_per_s']:13.0f} {r['warm']:6d}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="16,256,1024",
+                    help="comma-separated concurrent-job counts")
+    ap.add_argument("--epochs", type=int, default=8,
+                    help="service epochs per soak (60 s of service each)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench", default=os.path.join(REPO,
+                                                    "BENCH_sweep.json"),
+                    help="bench trajectory file to merge results into")
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s.strip()]
+    rows = [run_size(n, args.epochs, args.seed) for n in sizes]
+    print_table(rows)
+
+    from repro.obs import make_leg, merge_bench
+    legs = [make_leg(engine="fleet-sim", devices=1, seed=r["seed"],
+                     mode="ladder", scenarios=r["jobs"],
+                     epochs=r["epochs"], wall_s=round(r["wall_s"], 3),
+                     decisions=r["decisions"],
+                     decisions_per_s=round(r["decisions_per_s"], 2),
+                     ingest_samples_per_s=round(r["ingest_samples_per_s"],
+                                                1),
+                     scenario_steps_per_s=round(r["scenario_steps_per_s"],
+                                                1))
+            for r in rows]
+    merge_bench(args.bench, "fleet_bench", legs,
+                params={"sizes": sizes, "epochs": args.epochs})
+    print(f"\n# merged {len(legs)} leg(s) into {args.bench}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,10 @@
 """Verify every registered backend's compilation contract.
 
-Imports the four backend-defining modules (which attach their probe
+Imports the backend-defining modules (which attach their probe
 factories to the registries — see
 :meth:`repro.core.registry.Registry.attach_contract`), then enumerates
 ``SIM_ENGINES`` / ``FIT_BACKENDS`` / ``FORECAST_BACKENDS`` /
-``DETECTOR_BACKENDS`` and runs each entry's
+``DETECTOR_BACKENDS`` / ``FLEET_BACKENDS`` and runs each entry's
 :class:`~repro.analysis.contracts.ContractProbe` through
 :func:`~repro.analysis.contracts.check_contract`. A registered entry
 *without* an attached contract is itself a failure: new backends cannot
@@ -38,9 +38,12 @@ def _registries():
     import repro.core.forecast_bank    # noqa: F401
     import repro.dsp.executor          # noqa: F401
     import repro.dsp.fused             # noqa: F401
+    import repro.fleet.api             # noqa: F401
     from repro.core.registry import (DETECTOR_BACKENDS, FIT_BACKENDS,
-                                     FORECAST_BACKENDS, SIM_ENGINES)
-    return (SIM_ENGINES, FIT_BACKENDS, FORECAST_BACKENDS, DETECTOR_BACKENDS)
+                                     FLEET_BACKENDS, FORECAST_BACKENDS,
+                                     SIM_ENGINES)
+    return (SIM_ENGINES, FIT_BACKENDS, FORECAST_BACKENDS, DETECTOR_BACKENDS,
+            FLEET_BACKENDS)
 
 
 def _seed_violation() -> None:

@@ -27,7 +27,8 @@ from .gp import GP
 from .gp_bank import GPBank, batched_posterior
 from .latency import LatencyConstraint
 from .registry import (CONTROLLERS, DETECTOR_BACKENDS, FIT_BACKENDS,
-                       FORECAST_BACKENDS, FORECASTERS, SIM_ENGINES, Registry)
+                       FLEET_BACKENDS, FORECAST_BACKENDS, FORECASTERS,
+                       SIM_ENGINES, Registry)
 from .rgpe import RGPEnsemble, build_rgpe
 from .segments import (LATENCY, METRICS, RECOVERY, USAGE, Observation,
                        Segment, SegmentStore)
@@ -48,5 +49,5 @@ __all__ = [
     "BatchExecutor", "EngineConfig", "ProfileSpec", "ScalarAdapter",
     "ScenarioView", "coerce_config", "Registry", "CONTROLLERS",
     "FORECASTERS", "FIT_BACKENDS", "FORECAST_BACKENDS", "DETECTOR_BACKENDS",
-    "SIM_ENGINES",
+    "SIM_ENGINES", "FLEET_BACKENDS",
 ]

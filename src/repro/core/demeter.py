@@ -349,6 +349,11 @@ class DemeterController:
     #: wall-clock spent in the TSF forecaster (updates + rollout reads);
     #: sweeps aggregate this into ``SweepResult.forecast_update_wall_s``
     tsf_wall_s: float = 0.0
+    #: precomputed ``allocated_cost`` over ``space.enumerate()``. The cost
+    #: vector only depends on (space, executor cost model), so a fleet
+    #: sharing one space across thousands of jobs passes the same vector to
+    #: every controller instead of re-scanning |space| configs per job.
+    alloc: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         self.config = coerce_config(self.config,
@@ -368,8 +373,15 @@ class DemeterController:
                               fit_devices=self.config.devices)
         self._candidates = self.space.matrix()
         self._configs = self.space.enumerate()
-        self._alloc = np.asarray(
-            [self.executor.allocated_cost(c) for c in self._configs])
+        if self.alloc is not None:
+            if len(self.alloc) != len(self._configs):
+                raise ValueError(
+                    f"alloc has {len(self.alloc)} entries for a space of "
+                    f"{len(self._configs)} configs")
+            self._alloc = np.asarray(self.alloc, float)
+        else:
+            self._alloc = np.asarray(
+                [self.executor.allocated_cost(c) for c in self._configs])
 
     # ------------------------------------------------------------------
     # shared plumbing

@@ -33,8 +33,8 @@ from typing import (TYPE_CHECKING, Dict, List, Mapping, Optional, Protocol,
 
 import numpy as np
 
-from .registry import (DETECTOR_BACKENDS, FIT_BACKENDS, FORECAST_BACKENDS,
-                       SIM_ENGINES)
+from .registry import (DETECTOR_BACKENDS, FIT_BACKENDS, FLEET_BACKENDS,
+                       FORECAST_BACKENDS, SIM_ENGINES)
 
 if TYPE_CHECKING:                                    # avoid an import cycle:
     from .demeter import DemeterHyperParams          # demeter imports us
@@ -256,6 +256,11 @@ def _ensure_registered() -> None:
         # disable sim_backend validation.
         if e.name is None or not e.name.startswith("repro.dsp"):
             raise
+    try:                                 # the fleet layer registers backends
+        from ..fleet import api          # noqa: F401  (optional layer)
+    except ModuleNotFoundError as e:     # pragma: no cover - fleet absent
+        if e.name is None or not e.name.startswith("repro.fleet"):
+            raise
 
 
 @dataclass(frozen=True)
@@ -297,6 +302,10 @@ class EngineConfig:
     #: construction (see docs/SCALING.md for running multi-device on one
     #: CPU).
     devices: Optional[int] = None
+    #: Fleet-controller job backend: "sim" (ScenarioView / DSPExecutor sim
+    #: jobs) or "serving" (the TPU serving executor). Only consulted by
+    #: :class:`repro.fleet.service.FleetController`.
+    fleet_backend: str = "sim"
 
     def __post_init__(self) -> None:
         _ensure_registered()
@@ -305,6 +314,8 @@ class EngineConfig:
         DETECTOR_BACKENDS.validate(self.detector_backend)
         if len(SIM_ENGINES):             # populated once repro.dsp is present
             SIM_ENGINES.validate(self.sim_backend)
+        if len(FLEET_BACKENDS):          # populated once repro.fleet is present
+            FLEET_BACKENDS.validate(self.fleet_backend)
         if not self.decision_interval_s > 0:
             raise ValueError(f"decision_interval_s must be positive, got "
                              f"{self.decision_interval_s!r}")

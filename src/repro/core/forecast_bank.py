@@ -466,6 +466,11 @@ class _FamilyBank:
         self._q: List[List[float]] = [[] for _ in range(self.b)]
         with enable_x64():
             self.state, self.params = self._build(list(rows))
+            # Host-side snapshot of the initial state for partial resets
+            # (reset_rows): self.state's device buffers are donated on every
+            # flush, so a bare reference would be invalidated — copy out.
+            self._state0 = jax.tree.map(
+                lambda a: np.array(a), self.state)
             if self._mesh is not None:
                 self.state = self._shard_streams(self.state)
                 self.params = self._shard_streams(self.params)
@@ -554,6 +559,26 @@ class _FamilyBank:
         with enable_x64():
             out = self._roll(steps)
         return np.asarray(out)
+
+    def reset_rows(self, idx: Sequence[int]) -> None:
+        """Return streams ``idx`` to their just-constructed state.
+
+        The incremental entry point a long-running service needs: a fleet
+        slot freed by one job and reused by another must not leak the old
+        job's forecaster state. One tree-scatter over the stacked state
+        arrays (parameters are untouched — the row keeps its configured
+        family/order), and the rows' staging queues are dropped.
+        """
+        if len(idx) == 0:
+            return
+        rows = np.asarray(sorted(idx), dtype=np.int64)
+        with enable_x64():
+            take = jnp.asarray(rows)
+            self.state = type(self.state)(*(
+                cur.at[take].set(jnp.asarray(init[rows]))
+                for cur, init in zip(self.state, self._state0)))
+        for i in rows:
+            self._q[int(i)] = []
 
     def n_observed(self, i: int) -> int:
         return int(self.state.count[i])
@@ -823,6 +848,27 @@ class ForecastBank:
         self.n_updates += n
         return n
 
+    def reset_rows(self, rows: Sequence[int]) -> int:
+        """Reset streams ``rows`` to their just-constructed state (see
+        :meth:`_FamilyBank.reset_rows`) — one scatter per touched family.
+
+        Returns the number of streams reset. A fleet service calls this in
+        one batch per epoch for every slot freed-and-reused since the last
+        epoch, so slot churn costs O(families) dispatches, not O(jobs).
+        """
+        by_fam: Dict[str, List[int]] = {}
+        for row in rows:
+            fam, i = self._rows[row]
+            by_fam.setdefault(fam, []).append(i)
+        n = 0
+        with obs.timed_phase("forecast", "forecast.reset_rows",
+                             streams=sum(map(len, by_fam.values()))):
+            for fam, members in by_fam.items():
+                self._fams[fam].reset_rows(members)
+                self._drop_family_cache(fam)
+                n += len(members)
+        return n
+
     # -- reads ---------------------------------------------------------------
     def _drop_family_cache(self, fam: str) -> None:
         for k in [k for k in self._cache
@@ -1069,6 +1115,24 @@ class DetectorBank:
             self._warm = jnp.full(self.b, int(min_warmup), jnp.int64)
         self.wall_s = 0.0
         self.n_samples = 0
+        # Host snapshots for reset_rows (observe donates the live buffers).
+        self._state0 = jax.tree.map(lambda a: np.array(a), self._state)
+        self._ring0 = np.array(self._ring)
+        self._rn0 = np.array(self._rn)
+
+    def reset_rows(self, rows: Sequence[int]) -> None:
+        """Return detectors ``rows`` to their just-constructed state (the
+        fleet-slot-reuse mirror of :meth:`ForecastBank.reset_rows`)."""
+        if len(rows) == 0:
+            return
+        take = np.asarray(sorted(rows), dtype=np.int64)
+        with enable_x64():
+            idx = jnp.asarray(take)
+            self._state = type(self._state)(*(
+                cur.at[idx].set(jnp.asarray(init[take]))
+                for cur, init in zip(self._state, self._state0)))
+            self._ring = self._ring.at[idx].set(jnp.asarray(self._ring0[take]))
+            self._rn = self._rn.at[idx].set(jnp.asarray(self._rn0[take]))
 
     def observe(self, values: np.ndarray,
                 active: Optional[np.ndarray] = None) -> np.ndarray:

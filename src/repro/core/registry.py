@@ -20,6 +20,7 @@ registry                  entry                                     defined in
 :data:`FORECAST_BACKENDS` forecaster factory callable               ``repro.core.forecast_bank``
 :data:`DETECTOR_BACKENDS` anomaly-detector family class             ``repro.core.anomaly``
 :data:`SIM_ENGINES`       sweep executor class                      ``repro.dsp.executor``
+:data:`FLEET_BACKENDS`    fleet job-backend factory callable        ``repro.fleet.api``
 ========================  ========================================  =========
 
 Example — registering a third-party controller::
@@ -177,3 +178,9 @@ DETECTOR_BACKENDS: Registry = Registry("detector backend")
 #: ``"fused"`` engine) are driven whole-decision-interval-at-a-time by the
 #: sweep engine instead of per tick.
 SIM_ENGINES: Registry = Registry("engine")
+
+#: Fleet job backends ("sim" / "serving"). Entries build one job's executor
+#: and its config space for the fleet-controller service:
+#: ``factory(*, seed, **params) -> (Executor, ConfigSpace)``. The fleet's
+#: batched ingestion hot path carries the registry's compilation contract.
+FLEET_BACKENDS: Registry = Registry("fleet backend")

@@ -1,0 +1,23 @@
+"""Fleet-controller service mode: a continuous Demeter loop over many jobs.
+
+The production-scale shape of the reproduction (see ``docs/FLEET.md``):
+instead of one offline sweep, a long-lived :class:`FleetController` runs
+the paper's two processes continuously over thousands of concurrently
+registered jobs, with per-job forecaster/detector state held in shared
+batched banks (one dispatch per epoch regardless of fleet size), shared GP
+fits across due controllers, cold-start graceful degradation and a
+JSON-lines API surface (:mod:`repro.fleet.api`). :mod:`repro.fleet.loadgen`
+soaks the service with synthetic jobs replaying the sweep grid's workload
+generators.
+"""
+from .api import FleetAPI, serve_jsonl
+from .ingest import EPOCH_REDUCE_CONTRACT, INGEST_KEYS, IngestBuffer
+from .loadgen import SoakConfig, run_soak
+from .service import FleetConfig, FleetController, JobState
+
+__all__ = [
+    "FleetController", "FleetConfig", "JobState",
+    "IngestBuffer", "INGEST_KEYS", "EPOCH_REDUCE_CONTRACT",
+    "FleetAPI", "serve_jsonl",
+    "SoakConfig", "run_soak",
+]

@@ -1,0 +1,13 @@
+"""``python -m repro.fleet``: a JSON-lines fleet service on stdio.
+
+Lives here (not under ``if __name__`` in :mod:`repro.fleet.api`) because
+running the api module itself with ``-m`` would execute it twice — once as
+``repro.fleet.api`` via the package import, once as ``__main__`` — and
+re-register its ``FLEET_BACKENDS`` entries.
+"""
+import sys
+
+from .api import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Batched telemetry ingestion for the fleet controller.
+
+Thousands of jobs report telemetry asynchronously; the service consumes it
+in epochs. :class:`IngestBuffer` is the seam between the two cadences:
+
+* **offer** (host, per sample) — append to the job's bounded queue.
+  Backpressure is drop-oldest: a full queue sheds its oldest sample so the
+  freshest telemetry always survives. Samples may arrive out of order;
+  anything older than the row's *watermark* (the last drained epoch
+  boundary minus the lateness allowance) is too late to attribute to an
+  epoch and is dropped, counted.
+* **drain** (once per epoch) — collect every row's due samples, pad them
+  into one ``[rows, samples, keys]`` plane and reduce it to per-row means
+  in a **single** jitted dispatch (:data:`EPOCH_REDUCE_CONTRACT` pins the
+  dispatch shape discipline). Late-but-allowed samples simply land in the
+  next epoch's reduce.
+
+The sample axis is bucketed to powers of two (minimum ``4``) so the jit
+cache stays logarithmic in the per-epoch sample count regardless of how
+ragged the per-row queues are.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import obs
+from ..core.gp_bank import bucket_pow2
+
+#: Metric keys carried through the epoch reduce, in plane order.
+INGEST_KEYS = ("rate", "latency", "usage")
+
+#: Per-row sample queue bound (backpressure threshold).
+DEFAULT_QUEUE_CAP = 256
+
+#: How long after an epoch is drained its samples may still arrive.
+DEFAULT_LATENESS_S = 120.0
+
+
+@jax.jit
+def _epoch_reduce(vals: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """NaN-masked per-(row, key) means over the sample axis.
+
+    ``vals`` is ``[R, N, K]`` float32 with NaN marking absent samples (and
+    absent individual keys within a sample). Returns ``(means [R, K],
+    counts [R, K])``; a (row, key) with no finite samples means NaN.
+    """
+    mask = ~jnp.isnan(vals)
+    n = mask.sum(axis=1)
+    s = jnp.where(mask, vals, jnp.float32(0.0)).sum(axis=1)
+    mean = jnp.where(n > 0, s / jnp.maximum(n, 1), jnp.float32(jnp.nan))
+    return mean, n
+
+
+class IngestBuffer:
+    """Per-job telemetry queues feeding one batched epoch reduce."""
+
+    def __init__(self, capacity: int, *,
+                 keys: Sequence[str] = INGEST_KEYS,
+                 queue_cap: int = DEFAULT_QUEUE_CAP,
+                 lateness_s: float = DEFAULT_LATENESS_S):
+        if capacity < 1:
+            raise ValueError("IngestBuffer needs capacity >= 1")
+        if queue_cap < 1:
+            raise ValueError("queue_cap must be >= 1")
+        self.capacity = int(capacity)
+        self.keys = tuple(keys)
+        self.queue_cap = int(queue_cap)
+        self.lateness_s = float(lateness_s)
+        self._q: List[List[Tuple[float, Tuple[float, ...]]]] = [
+            [] for _ in range(self.capacity)]
+        self.watermark = np.full(self.capacity, -np.inf)
+        # counters (exposed through FleetController.stats)
+        self.accepted = 0
+        self.dropped_late = 0
+        self.dropped_overflow = 0
+        self.out_of_order = 0
+        self.drained = 0
+
+    # -- ingress (host, per sample) -----------------------------------------
+    def offer(self, row: int, t: float,
+              metrics: Mapping[str, float]) -> bool:
+        """Queue one sample for ``row`` at timestamp ``t``.
+
+        Returns False when the sample is too late to attribute to any
+        future epoch (``t`` at or below the row's watermark)."""
+        if t <= self.watermark[row]:
+            self.dropped_late += 1
+            return False
+        q = self._q[row]
+        if q and t < q[-1][0]:
+            self.out_of_order += 1
+        if len(q) >= self.queue_cap:        # backpressure: shed the oldest
+            q.sort(key=lambda s: s[0])
+            del q[0]
+            self.dropped_overflow += 1
+        q.append((float(t),
+                  tuple(float(metrics.get(k, np.nan)) for k in self.keys)))
+        self.accepted += 1
+        return True
+
+    def clear_row(self, row: int) -> None:
+        """Forget a departed job's queue and watermark (slot reuse)."""
+        self._q[row] = []
+        self.watermark[row] = -np.inf
+
+    def queue_depth(self, row: int) -> int:
+        return len(self._q[row])
+
+    def max_queue_depth(self) -> int:
+        return max((len(q) for q in self._q), default=0)
+
+    # -- epoch drain (one dispatch) -----------------------------------------
+    def drain(self, upto_t: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Reduce every row's samples with ``t <= upto_t`` to per-row means.
+
+        One jitted dispatch for the whole fleet. Advances each row's
+        watermark to ``upto_t - lateness_s``; samples newer than that may
+        still arrive and will fold into the *next* epoch. Returns
+        ``(means [capacity, K], counts [capacity, K])`` — NaN means for
+        rows/keys with no samples this epoch.
+        """
+        taken: List[List[Tuple[float, Tuple[float, ...]]]] = []
+        n_max = 0
+        for q in self._q:
+            due = [s for s in q if s[0] <= upto_t]
+            if due:
+                due.sort(key=lambda s: s[0])
+                q[:] = [s for s in q if s[0] > upto_t]
+            taken.append(due)
+            n_max = max(n_max, len(due))
+        self.watermark = np.maximum(self.watermark,
+                                    upto_t - self.lateness_s)
+        n_taken = sum(len(d) for d in taken)
+        K = len(self.keys)
+        if n_taken == 0:
+            return (np.full((self.capacity, K), np.nan),
+                    np.zeros((self.capacity, K), dtype=np.int64))
+        n_pad = bucket_pow2(n_max, minimum=4)
+        plane = np.full((self.capacity, n_pad, K), np.nan, dtype=np.float32)
+        for r, due in enumerate(taken):
+            for j, (_, vals) in enumerate(due):
+                plane[r, j, :] = vals
+        with obs.timed_phase("fleet", "fleet.ingest.drain",
+                             rows=self.capacity, samples=n_taken):
+            mean, n = _epoch_reduce(plane)
+        self.drained += n_taken
+        if obs.enabled():
+            obs.inc("fleet.ingest_samples", n_taken)
+            obs.track_jit_cache("fleet_ingest",
+                                int(_epoch_reduce._cache_size()))
+        return np.asarray(mean, dtype=np.float64), np.asarray(n)
+
+
+# ---------------------------------------------------------------------------
+# compilation contract (see repro.analysis and docs/ANALYSIS.md)
+# ---------------------------------------------------------------------------
+
+def _epoch_reduce_contract():
+    from ..analysis.contracts import CompilationContract
+    return CompilationContract(
+        name="fleet backend:ingest",
+        # Telemetry means need no more precision than their float32 inputs;
+        # the fleet reduce must never silently promote.
+        dtype_ceiling="float32",
+        forbid_callbacks=True,
+        max_primitives=48,
+        # The sample axis is bucketed pow2 (minimum 4): driving the reduce
+        # through raggedly-sized epochs must retrace once per bucket, never
+        # once per epoch.
+        max_traces=3,
+        note="fleet epoch reduce: one dispatch per epoch for the whole "
+             "fleet, sample axis bucketed pow2(min 4)")
+
+
+#: The ingestion hot path's invariants (construction is jax-free).
+EPOCH_REDUCE_CONTRACT = _epoch_reduce_contract()
+
+
+def contract_probe():
+    """The ingestion reduce packaged for
+    :func:`repro.analysis.contracts.run_probe`; registered on the
+    ``"sim"`` fleet backend (the dispatch is backend-independent)."""
+    from ..analysis.contracts import ContractProbe, count_traces
+
+    def _plane(rows: int, n: int) -> np.ndarray:
+        plane = np.full((rows, n, len(INGEST_KEYS)), np.nan,
+                        dtype=np.float32)
+        plane[:, 0, :] = 1.0
+        return plane
+
+    def traces() -> int:
+        # Ragged epochs landing in the same bucket must share a trace:
+        # sample counts {3,4} -> bucket 4, {7,8} -> 8, {9} -> 16.
+        return count_traces(
+            _epoch_reduce.__wrapped__,
+            arg_sets=[((_plane(8, bucket_pow2(n, minimum=4)),), {})
+                      for n in (3, 4, 7, 8, 9)])
+
+    return ContractProbe(contract=EPOCH_REDUCE_CONTRACT, fn=_epoch_reduce,
+                         args=(_plane(8, 4),), traces=traces)

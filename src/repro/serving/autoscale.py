@@ -18,9 +18,10 @@ drives a model-serving fleet unchanged.
 """
 from __future__ import annotations
 
+import collections
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Deque, Dict, Mapping, Optional
 
 import jax
 import numpy as np
@@ -109,7 +110,13 @@ class ServingCluster:
 
     # -- dynamics ---------------------------------------------------------------
     def step(self, rate_rps: float, dt: float) -> Dict[str, float]:
-        cap = self.capacity_rps() * (1.0 + 0.02 * self._rng.standard_normal())
+        # One config snapshot for the whole step: capacity, generation time
+        # and KV pressure must all describe the SAME configuration. Reading
+        # ``self.config`` separately per term let a concurrent/interleaved
+        # reconfigure (or any future cfg-parameterized step) silently mix
+        # one config's capacity with another's gen_s/kv_frac.
+        c = dict(self.config)
+        cap = self.capacity_rps(c) * (1.0 + 0.02 * self._rng.standard_normal())
         if self.downtime_left_s > 0:
             self.downtime_left_s = max(self.downtime_left_s - dt, 0.0)
             self.backlog += rate_rps * dt
@@ -122,14 +129,14 @@ class ServingCluster:
         ttft = self.profile.prefill_s + self.backlog / max(cap, 1e-9)
         gen_s = (self.model.tokens_per_request
                  * self.profile.decode_step_s
-                 / self.config["tp_degree"] ** self.model.tp_efficiency)
+                 / c["tp_degree"] ** self.model.tp_efficiency)
         latency = min(ttft + gen_s / (1.0 - min(rho, 0.99)) * 0.5 + gen_s,
                       120.0)
-        kv_frac = min(self.config["kv_blocks"] * 64.0
-                      / max(self.config["decode_slots"] * 2048.0, 1.0), 1.0)
-        usage = 0.5 * self.chips() / self.model.chips_total \
+        kv_frac = min(c["kv_blocks"] * 64.0
+                      / max(c["decode_slots"] * 2048.0, 1.0), 1.0)
+        usage = 0.5 * self.chips(c) / self.model.chips_total \
             * (0.4 + 0.6 * min(rho, 1.0)) \
-            + 0.5 * self.chips() / self.model.chips_total * kv_frac
+            + 0.5 * self.chips(c) / self.model.chips_total * kv_frac
         self.last = {"rate": rate_rps, "throughput": served / dt,
                      "consumer_lag": self.backlog, "latency": latency,
                      "utilization": rho, "usage": usage}
@@ -167,13 +174,14 @@ class ServingExecutor:
         "replicas": 16, "tp_degree": 8, "kv_blocks": 8192,
         "decode_slots": 64, "snapshot_interval_s": 10.0})
     dt: float = 5.0
-    _window: List[Dict[str, float]] = field(default_factory=list)
+    #: fixed-size telemetry ring (600 s at the default dt) — a long-running
+    #: service must not grow per-step state without bound
+    _window: Deque[Dict[str, float]] = field(
+        default_factory=lambda: collections.deque(maxlen=120))
 
     def step(self, rate: float) -> Dict[str, float]:
         m = self.cluster.step(rate, self.dt)
         self._window.append(m)
-        if len(self._window) > 120:
-            self._window.pop(0)
         return m
 
     # Executor protocol ----------------------------------------------------
@@ -189,7 +197,7 @@ class ServingExecutor:
     def observe(self) -> Dict[str, float]:
         if not self._window:
             return {}
-        w = self._window[-12:]
+        w = list(self._window)[-12:]
         return {"rate": float(np.mean([m["rate"] for m in w])),
                 "latency": float(np.mean([m["latency"] for m in w])),
                 "usage": float(np.mean([m["usage"] for m in w]))}

@@ -39,17 +39,28 @@ class Request:
         return None if self.done_s is None else self.done_s - self.arrival_s
 
 
+#: Ring sizes for the windowed metrics. They match the windows the readers
+#: always used (``p95_latency`` read ``latencies[-512:]``, ``telemetry``
+#: read ``step_times[-64:]``), so bounding the storage changes no result —
+#: it only stops the lists growing without bound over a long-running
+#: service (the bug class PR 3 fixed in the forecaster/detector state).
+LATENCY_RING = 512
+STEP_TIME_RING = 64
+
+
 @dataclass
 class EngineMetrics:
     completed: int = 0
     decode_steps: int = 0
-    latencies: List[float] = field(default_factory=list)
-    step_times: List[float] = field(default_factory=list)
+    latencies: Deque[float] = field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
+    step_times: Deque[float] = field(
+        default_factory=lambda: collections.deque(maxlen=STEP_TIME_RING))
 
     def p95_latency(self) -> float:
         if not self.latencies:
             return float("nan")
-        return float(np.percentile(self.latencies[-512:], 95))
+        return float(np.percentile(np.fromiter(self.latencies, float), 95))
 
 
 class ServingEngine:
@@ -151,6 +162,7 @@ class ServingEngine:
             "occupancy": self.cache_mgr.occupancy(),
             "p95_latency_s": self.metrics.p95_latency(),
             "completed": float(self.metrics.completed),
-            "mean_step_s": float(np.mean(self.metrics.step_times[-64:]))
+            "mean_step_s": float(np.mean(np.fromiter(
+                self.metrics.step_times, float)))
             if self.metrics.step_times else float("nan"),
         }

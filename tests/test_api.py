@@ -46,7 +46,7 @@ CORE_EXPORTS = {
     "BatchExecutor", "EngineConfig", "ProfileSpec", "ScalarAdapter",
     "ScenarioView", "coerce_config", "Registry", "CONTROLLERS",
     "FORECASTERS", "FIT_BACKENDS", "FORECAST_BACKENDS", "DETECTOR_BACKENDS",
-    "SIM_ENGINES",
+    "SIM_ENGINES", "FLEET_BACKENDS",
 }
 
 DSP_EXPORTS = {
@@ -90,7 +90,8 @@ class TestApiSnapshot:
         params = inspect.signature(EngineConfig).parameters
         assert list(params) == ["sim_backend", "fit_backend",
                                 "forecast_backend", "detector_backend",
-                                "hp", "decision_interval_s", "devices"]
+                                "hp", "decision_interval_s", "devices",
+                                "fleet_backend"]
 
     def test_demeter_controller_signature(self):
         params = inspect.signature(DemeterController).parameters

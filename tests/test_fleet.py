@@ -1,0 +1,372 @@
+"""Fleet-controller service tests.
+
+Covers the tentpole subsystem (``repro.fleet``): batched ingestion
+(:class:`IngestBuffer`), bank slot recycling (``reset_rows``), the epoch
+service loop (registration churn, cold-start degradation, warm-up), the
+deterministic ≥1000-job loadgen soak, and the serving-layer bounded-state
+satellites (EngineMetrics rings, the ServingExecutor window, and the
+single-snapshot config routing in ``ServingCluster.step``).
+
+Deliberately NOT in ``tests/test_serving.py``: that module skips wholesale
+when ``hypothesis`` is missing, and nothing here needs it.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core.config_space import paper_flink_space
+from repro.core.forecast_bank import DetectorBank, ForecastBank
+from repro.core.registry import FLEET_BACKENDS
+from repro.fleet.ingest import INGEST_KEYS, IngestBuffer
+from repro.fleet.loadgen import SoakConfig, run_soak
+from repro.fleet.service import (COLD_UTIL_REVERT, FleetConfig,
+                                 FleetController)
+
+# ---------------------------------------------------------------------------
+# ingestion
+# ---------------------------------------------------------------------------
+
+
+class TestIngestBuffer:
+    def test_offer_drain_means(self):
+        buf = IngestBuffer(4)
+        buf.offer(0, 10.0, {"rate": 100.0, "latency": 2.0, "usage": 0.5})
+        buf.offer(0, 20.0, {"rate": 300.0, "latency": 4.0, "usage": 0.7})
+        buf.offer(2, 15.0, {"rate": 50.0})      # latency/usage absent -> NaN
+        means, counts = buf.drain(60.0)
+        k = {name: i for i, name in enumerate(INGEST_KEYS)}
+        assert means[0, k["rate"]] == pytest.approx(200.0)
+        assert means[0, k["latency"]] == pytest.approx(3.0)
+        assert counts[0, k["rate"]] == 2
+        assert means[2, k["rate"]] == pytest.approx(50.0)
+        assert np.isnan(means[2, k["latency"]])
+        assert counts[2, k["latency"]] == 0
+        # untouched rows: NaN means, zero counts
+        assert np.isnan(means[1]).all() and counts[1].sum() == 0
+        assert buf.accepted == 3 and buf.drained == 3
+
+    def test_late_samples_dropped_behind_watermark(self):
+        buf = IngestBuffer(2, lateness_s=30.0)
+        buf.offer(0, 10.0, {"rate": 1.0})
+        buf.drain(60.0)                          # watermark -> 30.0
+        assert not buf.offer(0, 25.0, {"rate": 9.0})
+        assert buf.dropped_late == 1
+        # inside the allowance: accepted, lands in the NEXT drain
+        assert buf.offer(0, 45.0, {"rate": 5.0})
+        means, _ = buf.drain(120.0)
+        assert means[0, 0] == pytest.approx(5.0)
+
+    def test_out_of_order_counted_not_dropped(self):
+        buf = IngestBuffer(1)
+        buf.offer(0, 20.0, {"rate": 2.0})
+        buf.offer(0, 10.0, {"rate": 4.0})        # arrives late but in-window
+        assert buf.out_of_order == 1
+        means, counts = buf.drain(60.0)
+        assert counts[0, 0] == 2 and means[0, 0] == pytest.approx(3.0)
+
+    def test_overflow_sheds_oldest(self):
+        buf = IngestBuffer(1, queue_cap=3)
+        for i in range(5):
+            buf.offer(0, float(i), {"rate": float(i)})
+        assert buf.dropped_overflow == 2
+        assert buf.queue_depth(0) == 3
+        means, _ = buf.drain(60.0)
+        assert means[0, 0] == pytest.approx(np.mean([2.0, 3.0, 4.0]))
+
+    def test_partial_drain_keeps_future_samples(self):
+        buf = IngestBuffer(1)
+        buf.offer(0, 30.0, {"rate": 1.0})
+        buf.offer(0, 90.0, {"rate": 7.0})        # belongs to the next epoch
+        means, counts = buf.drain(60.0)
+        assert counts[0, 0] == 1 and means[0, 0] == pytest.approx(1.0)
+        means, counts = buf.drain(120.0)
+        assert counts[0, 0] == 1 and means[0, 0] == pytest.approx(7.0)
+
+    def test_clear_row_resets_queue_and_watermark(self):
+        buf = IngestBuffer(2)
+        buf.offer(1, 10.0, {"rate": 1.0})
+        buf.drain(60.0)
+        buf.clear_row(1)
+        assert buf.queue_depth(1) == 0
+        assert buf.offer(1, 0.5, {"rate": 2.0})  # pre-watermark t fine again
+
+
+# ---------------------------------------------------------------------------
+# bank slot recycling
+# ---------------------------------------------------------------------------
+
+
+class TestBankResets:
+    def test_forecast_bank_reset_rows(self):
+        fb = ForecastBank.from_kinds(["arima"] * 4, horizon=4)
+        for step in range(6):
+            for r in range(4):
+                fb.stage(r, 100.0 + 10.0 * r + step)
+            fb.flush()
+        assert all(v.n_observed == 6 for v in fb.views())
+        assert fb.reset_rows([1, 3]) == 2
+        views = fb.views()
+        assert views[1].n_observed == 0 and views[3].n_observed == 0
+        assert views[0].n_observed == 6 and views[2].n_observed == 6
+        # a recycled row regrows from pristine state
+        fb.stage(1, 42.0)
+        fb.flush()
+        assert fb.views()[1].n_observed == 1
+        assert fb.reset_rows([]) == 0
+
+    def test_detector_bank_reset_rows(self):
+        det = DetectorBank(3, min_warmup=4)
+        for _ in range(30):
+            det.observe(np.array([10.0, 10.0, 10.0]))
+        det.reset_rows([0])
+        # the spike flags only on warmed rows; row 0 is cold again
+        flags = det.observe(np.array([500.0, 500.0, 500.0]))
+        assert not flags[0] and flags[1] and flags[2]
+
+
+# ---------------------------------------------------------------------------
+# the service loop
+# ---------------------------------------------------------------------------
+
+
+class _FakeExec:
+    """Minimal scalar Executor for service-policy tests."""
+
+    def __init__(self):
+        self.cfg = {"workers": 2}
+        self.reconfigures = []
+
+    def cmax_config(self):
+        return {"workers": 8}
+
+    def current_config(self):
+        return dict(self.cfg)
+
+    def reconfigure(self, config):
+        self.cfg = dict(config)
+        self.reconfigures.append(dict(config))
+
+    def observe(self):
+        return {}
+
+    def profile(self, configs, rate):
+        return []
+
+    def allocated_cost(self, config):
+        return config["workers"] / 8.0
+
+
+def _small_fleet(**kw) -> FleetController:
+    kw.setdefault("capacity", 4)
+    kw.setdefault("cold_start_min_obs", 2)
+    return FleetController(fleet=FleetConfig(**kw))
+
+
+class TestFleetService:
+    def test_register_deregister_slot_reuse(self):
+        fleet = _small_fleet()
+        ex = _FakeExec()
+        space = paper_flink_space()
+        assert fleet.register_job("a", ex, space) == 0
+        assert fleet.register_job("b", _FakeExec(), space) == 1
+        assert fleet.register_job("c", _FakeExec(), space) == 2
+        fleet.deregister_job("b")
+        # lowest freed slot is reused deterministically
+        assert fleet.register_job("d", _FakeExec(), space) == 1
+        assert fleet.n_jobs == 3
+        with pytest.raises(ValueError, match="already registered"):
+            fleet.register_job("a", _FakeExec(), space)
+        with pytest.raises(ValueError, match="unknown job"):
+            fleet.deregister_job("nope")
+
+    def test_capacity_exhaustion(self):
+        fleet = _small_fleet(capacity=1)
+        fleet.register_job("a", _FakeExec(), paper_flink_space())
+        with pytest.raises(RuntimeError, match="at capacity"):
+            fleet.register_job("b", _FakeExec(), paper_flink_space())
+
+    def test_cold_jobs_hold_then_revert_on_overload(self):
+        fleet = _small_fleet(cold_start_min_obs=99)   # stay cold forever
+        ex = _FakeExec()
+        fleet.register_job("a", ex, paper_flink_space())
+        fleet.report_telemetry("a", 30.0,
+                               {"rate": 100.0, "latency": 1.0, "usage": 0.4})
+        fleet.run_epoch()
+        assert ex.reconfigures == []                  # healthy -> hold
+        fleet.report_telemetry(
+            "a", 90.0, {"rate": 100.0, "latency": 1.0,
+                        "usage": COLD_UTIL_REVERT + 0.05})
+        fleet.run_epoch()
+        assert ex.reconfigures == [{"workers": 8}]    # overload -> C_max
+        last = fleet.job("a").last_decision
+        assert last["reason"] == "cold-revert" and last["policy"] == "cold"
+        # already at C_max: the guard does not thrash
+        fleet.report_telemetry("a", 150.0, {"rate": 100.0, "usage": 0.99})
+        fleet.run_epoch()
+        assert len(ex.reconfigures) == 1
+
+    def test_warm_up_after_min_obs(self):
+        fleet = _small_fleet(cold_start_min_obs=2)
+        factory = FLEET_BACKENDS.get("sim")
+        ex, space = factory(seed=0)
+        fleet.register_job("a", ex, space)
+        for epoch in range(2):
+            fleet.report_telemetry(
+                "a", 30.0 + 60.0 * epoch,
+                {"rate": 800.0 + epoch, "latency": 1.5, "usage": 0.5})
+            fleet.run_epoch()
+        job = fleet.job("a")
+        assert job.policy == "demeter" and job.ctl is not None
+        assert job.epochs_observed == 2
+        assert fleet.stats()["warmups"] == 1
+        # the warm controller reads the job's shared bank row
+        assert job.ctl.tsf.n_observed == 2
+
+    def test_shared_alloc_cache(self):
+        fleet = _small_fleet(cold_start_min_obs=1)
+        factory = FLEET_BACKENDS.get("sim")
+        ex1, space = factory(seed=0)
+        ex2, _ = factory(seed=1)
+        fleet.register_job("a", ex1, space)
+        fleet.register_job("b", ex2, space)
+        for job_id in ("a", "b"):
+            fleet.report_telemetry(job_id, 30.0, {"rate": 500.0,
+                                                  "latency": 1.0})
+        fleet.run_epoch()
+        a, b = fleet.job("a"), fleet.job("b")
+        assert a.ctl is not None and b.ctl is not None
+        # different executors over the same model+space share one scan
+        assert len(fleet._alloc_cache) >= 1
+
+    def test_epoch_summary_and_stats_shape(self):
+        fleet = _small_fleet()
+        fleet.register_job("a", _FakeExec(), paper_flink_space())
+        summary = fleet.run_epoch()
+        assert summary["epoch"] == 1 and summary["jobs"] == 1
+        stats = fleet.stats()
+        assert stats["epoch"] == 1 and stats["capacity"] == 4
+        assert set(stats["ingest"]) == {
+            "accepted", "drained", "dropped_late", "dropped_overflow",
+            "out_of_order", "max_queue_depth"}
+        assert len(stats["decision_digest"]) == 64
+
+    def test_decision_log_ring_bounded_digest_total(self):
+        fleet = _small_fleet(decision_log_cap=8, cold_start_min_obs=99)
+        ex = _FakeExec()
+        fleet.register_job("a", ex, paper_flink_space())
+        for epoch in range(20):
+            ex.cfg = {"workers": 2}                  # re-arm the guard
+            fleet.report_telemetry("a", 30.0 + 60.0 * epoch,
+                                   {"rate": 1.0, "usage": 0.95})
+            fleet.run_epoch()
+        assert fleet.n_decisions == 20
+        assert len(fleet.decision_log) == 8          # ring stays bounded
+
+
+# ---------------------------------------------------------------------------
+# the acceptance soak: >= 1000 jobs, churn + failures + lateness,
+# bit-identical decisions across same-seed runs
+# ---------------------------------------------------------------------------
+
+
+class TestSoak:
+    @pytest.mark.slow
+    def test_thousand_job_soak_is_deterministic(self):
+        cfg = SoakConfig(n_jobs=1000, epochs=6, seed=7)
+        r1 = run_soak(cfg)
+        r2 = run_soak(cfg)
+        # bit-identical decision log under a fixed seed
+        assert r1["decision_digest"] == r2["decision_digest"]
+        assert r1["decisions"] == r2["decisions"] > 0
+        # the soak exercised every disturbance path
+        assert r1["churned"] > 0
+        assert r1["failures"] > 0
+        assert r1["held_late"] > 0
+        assert r1["lost"] > 0                        # behind-watermark drops
+        stats = r1["stats"]
+        assert stats["ingest"]["dropped_late"] == r1["lost"]
+        assert stats["ingest"]["out_of_order"] > 0
+        # epochs advanced monotonically to exactly the configured count
+        assert stats["epoch"] == cfg.epochs
+        assert stats["now_s"] == pytest.approx(cfg.epochs * 60.0)
+        # bounded memory: queues never exceeded the backpressure cap and
+        # ended the run drained
+        assert stats["ingest"]["max_queue_depth"] <= FleetConfig().queue_cap
+        # most of the fleet graduated to warm Demeter controllers
+        assert stats["warm"] > cfg.n_jobs * 0.9
+
+    def test_digest_reflects_decision_content(self):
+        # Two fleets whose decisions differ (overload at different epochs)
+        # must carry different digests — the digest pins content, not count.
+        digests = []
+        for overload_epoch in (1, 2):
+            fleet = _small_fleet(cold_start_min_obs=99)
+            fleet.register_job("a", _FakeExec(), paper_flink_space())
+            for epoch in range(3):
+                usage = 0.99 if epoch == overload_epoch else 0.3
+                fleet.report_telemetry("a", 30.0 + 60.0 * epoch,
+                                       {"rate": 10.0, "usage": usage})
+                fleet.run_epoch()
+            assert fleet.n_decisions == 1
+            digests.append(fleet.decision_digest())
+        assert digests[0] != digests[1]
+
+    def test_soak_config_validation(self):
+        with pytest.raises(ValueError):
+            SoakConfig(n_jobs=0)
+        with pytest.raises(ValueError):
+            SoakConfig(late_frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# serving-layer bounded-state satellites
+# ---------------------------------------------------------------------------
+
+
+class TestServingBoundedState:
+    def test_engine_metrics_rings_are_bounded(self):
+        from repro.serving.engine import (LATENCY_RING, STEP_TIME_RING,
+                                          EngineMetrics)
+        m = EngineMetrics()
+        for i in range(LATENCY_RING * 2):
+            m.latencies.append(float(i))
+            m.step_times.append(float(i))
+        assert len(m.latencies) == LATENCY_RING
+        assert len(m.step_times) == STEP_TIME_RING
+        # the ring keeps the newest samples (p95 over the recent window)
+        assert m.latencies[0] == float(LATENCY_RING)
+        assert np.isfinite(m.p95_latency())
+
+    def test_serving_executor_window_is_bounded(self):
+        from repro.serving.autoscale import (ClusterModelParams,
+                                             ReplicaProfile, ServingCluster,
+                                             ServingExecutor)
+        cluster = ServingCluster(ReplicaProfile(0.02, 0.05, 8),
+                                 ClusterModelParams(), seed=0)
+        ex = ServingExecutor(cluster)
+        for _ in range(300):
+            ex.step(50.0)
+        assert isinstance(ex._window, collections.deque)
+        assert len(ex._window) == 120
+        obs = ex.observe()
+        assert set(obs) == {"rate", "latency", "usage"}
+
+    def test_cluster_step_uses_one_config_snapshot(self):
+        from repro.serving.autoscale import (ClusterModelParams,
+                                             ReplicaProfile, ServingCluster)
+        seen = []
+
+        class Spy(ServingCluster):
+            def capacity_rps(self, cfg=None):
+                seen.append(cfg)
+                return super().capacity_rps(cfg)
+
+        cluster = Spy(ReplicaProfile(0.02, 0.05, 8), ClusterModelParams(),
+                      seed=0)
+        cluster.step(50.0, 5.0)
+        # step must pass its own snapshot, never let capacity re-read the
+        # live (mutable) config dict mid-step
+        assert len(seen) == 1
+        assert seen[0] is not None
+        assert seen[0] == cluster.config and seen[0] is not cluster.config

@@ -1,0 +1,146 @@
+"""Fleet API surface tests: in-process dict ops and the JSON-lines wire.
+
+The subprocess test drives ``python -m repro.fleet.api`` end to end — the
+exact transport a non-Python peer would use — and asserts the one-request /
+one-response framing, backend resolution through ``FLEET_BACKENDS``, and
+the uniform error shape.
+"""
+import io
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.fleet.api import FleetAPI, serve_jsonl
+from repro.fleet.service import FleetConfig
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _api(**fleet_kw) -> FleetAPI:
+    fleet_kw.setdefault("capacity", 4)
+    fleet_kw.setdefault("profiling", False)
+    return FleetAPI(fleet=FleetConfig(**fleet_kw))
+
+
+class TestInProcess:
+    def test_register_report_epoch_recommend(self):
+        api = _api()
+        r = api.handle({"op": "register_job", "job_id": "a",
+                        "backend": "sim"})
+        assert r["ok"] and r["row"] == 0 and r["backend"] == "sim"
+        r = api.handle({"op": "report_telemetry", "job_id": "a", "t": 30.0,
+                        "metrics": {"rate": 500.0, "latency": 1.2,
+                                    "usage": 0.5}})
+        assert r["ok"] and r["accepted"]
+        r = api.handle({"op": "run_epoch"})
+        assert r["ok"] and r["epoch"] == 1 and r["observed"] == 1
+        r = api.handle({"op": "recommend", "job_id": "a"})
+        assert r["ok"] and r["policy"] == "cold"
+        assert r["epochs_observed"] == 1
+        r = api.handle({"op": "stats"})
+        assert r["ok"] and r["jobs"] == 1
+        r = api.handle({"op": "deregister_job", "job_id": "a"})
+        assert r["ok"]
+        assert api.handle({"op": "stats"})["jobs"] == 0
+
+    def test_default_backend_comes_from_engine_config(self):
+        api = _api()
+        assert api.controller.config.fleet_backend == "sim"
+        r = api.handle({"op": "register_job", "job_id": "a"})
+        assert r["ok"] and r["backend"] == "sim"
+
+    def test_serving_backend_registers(self):
+        api = _api()
+        r = api.handle({"op": "register_job", "job_id": "s",
+                        "backend": "serving",
+                        "params": {"decode_step_s": 0.01}})
+        assert r["ok"] and r["backend"] == "serving"
+        rec = api.handle({"op": "recommend", "job_id": "s"})
+        assert rec["ok"] and "replicas" in rec["config"]
+
+    def test_error_shapes_are_uniform(self):
+        api = _api()
+        for req in ({"op": "frobnicate"},
+                    {"op": "recommend", "job_id": "ghost"},
+                    {"op": "register_job"},                 # missing job_id
+                    {"op": "register_job", "job_id": "x",
+                     "backend": "not-a-backend"},
+                    {"op": "report_telemetry", "job_id": "x", "t": 1.0,
+                     "metrics": {}}):
+            r = api.handle(req)
+            assert r["ok"] is False and isinstance(r["error"], str), req
+
+    def test_unknown_backend_error_names_available(self):
+        api = _api()
+        r = api.handle({"op": "register_job", "job_id": "x",
+                        "backend": "bogus"})
+        assert not r["ok"] and "sim" in r["error"]
+
+
+class TestJsonLines:
+    def test_serve_jsonl_in_memory(self):
+        requests = [
+            {"op": "register_job", "job_id": "a", "backend": "sim"},
+            {"op": "report_telemetry", "job_id": "a", "t": 30.0,
+             "metrics": {"rate": 100.0, "latency": 1.0, "usage": 0.4}},
+            {"op": "run_epoch"},
+            "this is not json",
+            {"op": "shutdown"},
+            {"op": "stats"},                       # never reached
+        ]
+        lines = [r if isinstance(r, str) else json.dumps(r)
+                 for r in requests]
+        out = io.StringIO()
+        served = serve_jsonl(_api(), io.StringIO("\n".join(lines) + "\n"),
+                             out)
+        responses = [json.loads(line) for line in
+                     out.getvalue().strip().splitlines()]
+        assert served == 5                         # stopped at shutdown
+        assert responses[0]["ok"] and responses[0]["row"] == 0
+        assert responses[2]["ok"] and responses[2]["epoch"] == 1
+        assert not responses[3]["ok"] and "bad json" in responses[3]["error"]
+        assert responses[4] == {"ok": True, "shutdown": True}
+
+    @pytest.mark.slow
+    def test_subprocess_round_trip(self):
+        """The real wire: a child ``python -m repro.fleet`` on stdio."""
+        env = os.environ.copy()
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(REPO_ROOT / "src")]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        requests = [
+            {"op": "register_job", "job_id": "a", "backend": "sim"},
+            {"op": "register_job", "job_id": "b", "backend": "sim",
+             "params": {"seed": 3}},
+            {"op": "report_telemetry", "job_id": "a", "t": 30.0,
+             "metrics": {"rate": 500.0, "latency": 1.5, "usage": 0.5}},
+            {"op": "run_epoch"},
+            {"op": "recommend", "job_id": "a"},
+            {"op": "nope"},
+            {"op": "stats"},
+            {"op": "shutdown"},
+        ]
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.fleet", "--capacity", "4",
+             "--no-profiling"],
+            input="\n".join(json.dumps(r) for r in requests) + "\n",
+            env=env, cwd=str(REPO_ROOT), capture_output=True, text=True,
+            timeout=600.0)
+        assert proc.returncode == 0, proc.stderr
+        responses = [json.loads(line)
+                     for line in proc.stdout.strip().splitlines()]
+        assert len(responses) == len(requests)
+        reg_a, reg_b, tel, epoch, rec, bad, stats, bye = responses
+        assert reg_a["ok"] and reg_a["row"] == 0
+        assert reg_b["ok"] and reg_b["row"] == 1
+        assert tel["ok"] and tel["accepted"] is True
+        assert epoch["ok"] and epoch["epoch"] == 1 and epoch["jobs"] == 2
+        assert rec["ok"] and rec["policy"] == "cold"
+        assert not bad["ok"] and "unknown op" in bad["error"]
+        assert stats["ok"] and stats["jobs"] == 2 \
+            and len(stats["decision_digest"]) == 64
+        assert bye == {"ok": True, "shutdown": True}
